@@ -1,0 +1,81 @@
+"""PEFT adapter-initialization comparison (paper §6.2, Table 4).
+
+Initializes LoRA-style adapters with each method (LoRA / PiSSA / CorDA /
+COALA α=1 / COALA α=2), fine-tunes the adapters only, and reports CE.
+
+  PYTHONPATH=src python examples/finetune_adapters.py [--rank 8] [--steps 30]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import TrainConfig
+from repro.configs import get_smoke_config
+from repro.core.adapters import init_adapters, mask_grads, merge_adapters
+from repro.core.calibrate import calibrate_model
+from repro.data import DataConfig, TokenPipeline
+from repro.models import build_model
+from repro.models.common import CPU_CTX
+from repro.train.optimizer import adamw_init, adamw_update
+from repro.train.train_loop import make_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3_1b")
+    ap.add_argument("--rank", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=30)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    # pre-train on distribution A, fine-tune on distribution B
+    pipe_a = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                      global_batch=8, seed=11), cfg)
+    pipe_b = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                      global_batch=8, seed=99, noise=0.05), cfg)
+
+    tcfg = TrainConfig(lr=3e-3, warmup_steps=5, total_steps=100,
+                       schedule="cosine", compute_dtype="float32")
+    state = make_train_state(model, tcfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, tcfg, CPU_CTX))
+    for i in range(100):
+        state, _ = step(state, pipe_a.get_batch(i))
+    params = state["params"]
+
+    cal = calibrate_model(model, params,
+                          [pipe_b.get_batch(2000 + i) for i in range(3)])
+
+    def eval_b(p):
+        return float(np.mean([float(model.loss(p, pipe_b.get_batch(1000 + i),
+                                               compute_dtype=jnp.float32)[0])
+                              for i in range(3)]))
+
+    print(f"pre-trained model on task B: CE={eval_b(params):.4f}\n")
+    ft_cfg = TrainConfig(lr=1e-3, warmup_steps=2, total_steps=args.steps,
+                         schedule="const", weight_decay=0.0)
+    for method in ("lora", "pissa", "corda", "coala_a1", "coala_a2"):
+        ap_, mask = init_adapters(params, cal.r_factors(), method=method,
+                                  rank=args.rank)
+        opt = adamw_init(ap_)
+
+        @jax.jit
+        def ft_step(p, o, batch):
+            def lf(p):
+                return model.loss(p, batch, compute_dtype=jnp.float32)[0]
+            loss, g = jax.value_and_grad(lf)(p)
+            g = mask_grads(g, mask)
+            p, o, _ = adamw_update(ft_cfg, p, g, o)
+            return p, o, loss
+
+        for i in range(args.steps):
+            ap_, opt, _ = ft_step(ap_, opt, pipe_b.get_batch(i))
+        merged = merge_adapters(ap_)
+        print(f"{method:10s}: CE on task B after {args.steps} adapter steps "
+              f"= {eval_b(merged):.4f}")
+
+
+if __name__ == "__main__":
+    main()

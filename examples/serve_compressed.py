@@ -1,0 +1,58 @@
+"""Batched serving of a COALA-compressed model: prefill + decode loop,
+dense-vs-compressed parameter counts, KV-cache reuse.
+
+  PYTHONPATH=src python examples/serve_compressed.py [--ratio 0.6]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import CompressConfig
+from repro.configs import get_smoke_config
+from repro.core.calibrate import calibrate_model
+from repro.core.compress import compress_model, compression_summary
+from repro.data import DataConfig, TokenPipeline
+from repro.models import build_model
+from repro.serve import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_135m")
+    ap.add_argument("--ratio", type=float, default=0.6)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                    global_batch=args.batch), cfg)
+
+    cal = calibrate_model(model, params, [pipe.get_batch(i) for i in range(2)])
+    cparams, reports = compress_model(
+        model, params, cal, CompressConfig(method="coala", ratio=args.ratio,
+                                           lam=4.0, mu=-1.0))
+    s = compression_summary(reports)
+    n0 = sum(x.size for x in jax.tree.leaves(params))
+    n1 = sum(x.size for x in jax.tree.leaves(cparams))
+    print(f"params: {n0/1e6:.2f}M -> {n1/1e6:.2f}M "
+          f"(compressed layers kept {s['kept_ratio']:.0%})")
+
+    prompt = pipe.get_batch(100)["tokens"][:, :8]
+    for name, p in (("dense", params), ("coala", cparams)):
+        eng = ServeEngine(model, p, compute_dtype=jnp.float32,
+                          cache_dtype=jnp.float32)
+        t0 = time.perf_counter()
+        out = eng.generate(prompt, max_new_tokens=args.new_tokens)
+        dt = time.perf_counter() - t0
+        print(f"{name:6s}: generated {out.shape[0]}x{args.new_tokens} tokens "
+              f"in {dt:.2f}s (incl. compile)")
+    print("done ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Assigned architecture registry: ``get_config(name)`` / ``get_smoke_config``.
+
+Each module defines CONFIG (the exact assigned full-size config) and
+SMOKE (a reduced same-family config for CPU tests).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "whisper_base",
+    "deepseek_moe_16b",
+    "deepseek_v2_lite_16b",
+    "xlstm_1_3b",
+    "gemma2_27b",
+    "olmo_1b",
+    "smollm_135m",
+    "minicpm_2b",
+    "qwen2_vl_2b",
+    "jamba_v0_1_52b",
+    # the paper's own evaluation models (compression targets)
+    "llama3_1b",
+    "mistral_7b",
+]
+
+
+def _norm(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_norm(name)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_norm(name)}")
+    return mod.SMOKE
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,24 @@
+"""COALA core: the paper's contribution as a composable JAX library."""
+from repro.core.coala import (  # noqa: F401
+    CoalaResult,
+    coala_factors,
+    coala_project,
+    coala_alpha_factors,
+    eym_truncate,
+    mu_from_lambda,
+    r_from_x,
+    rsvd_left_singvecs,
+    weighted_error,
+    balanced_split,
+)
+from repro.core.tsqr import (  # noqa: F401
+    RStreamer,
+    augment_r_with_mu,
+    distributed_tsqr_r,
+    gram_chunked,
+    qr_r,
+    square_r,
+    tsqr_sequential,
+    tsqr_tree,
+)
+from repro.core import baselines, theory  # noqa: F401

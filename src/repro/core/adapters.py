@@ -1,0 +1,130 @@
+"""PEFT adapter initialization (paper §6.2, Table 4).
+
+Unified through Proposition 4's (XXᵀ)^α family:
+
+  * lora   — random A, zero B (Hu et al.)
+  * pissa  — α=0: principal subspace of W itself (Meng et al.)
+  * corda  — α=2 via the fragile Gram-inverse form (Remark 1 baseline)
+  * coala  — α∈{1,2} inversion-free (the paper's robustified variants)
+
+Each method converts target linears to {"w": W_res, "b_t": Bᵀ, "a_t": Aᵀ}
+(dense residual + trainable low-rank adapter — ``linear_apply`` sums them),
+and returns a boolean mask marking the trainable adapter leaves.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines as bl
+from repro.core import coala as coala_lib
+from repro.core.compress import COMPRESSIBLE_KEYS, compressible
+
+
+def _init_one(w, r_factor, method: str, rank: int, key):
+    """w: (d_in, d_out) storage view. Returns (w_res, b_t, a_t)."""
+    d_in, d_out = w.shape
+    w_mat = w.T.astype(jnp.float32)                    # (d_out, d_in)
+    if method == "lora":
+        a_t = jnp.zeros((rank, d_out), w.dtype)        # B=0 start
+        b_t = (jax.random.normal(key, (d_in, rank), jnp.float32)
+               / jnp.sqrt(d_in)).astype(w.dtype)
+        return w, b_t, a_t
+    if method == "pissa":
+        a, b = coala_lib.coala_alpha_factors(w_mat, r_factor=jnp.eye(d_in),
+                                             rank=rank, alpha=0.0)
+    elif method == "corda":
+        gram = r_factor.T @ r_factor
+        x_proxy = r_factor.T                           # XXᵀ = RᵀR
+        a, b = bl.corda(w_mat, x_proxy, rank)
+    elif method.startswith("coala"):
+        alpha = float(method.split("_a")[1]) if "_a" in method else 1.0
+        a, b = coala_lib.coala_alpha_factors(w_mat, r_factor=r_factor,
+                                             rank=rank, alpha=alpha)
+    else:
+        raise ValueError(method)
+    a, b = coala_lib.balanced_split(a, b)
+    w_res = (w_mat - a @ b).T.astype(w.dtype)
+    return w_res, b.T.astype(w.dtype), a.T.astype(w.dtype)
+
+
+def _init_flat(params, r_factors, method, rank, key):
+    def walk(node, path):
+        nonlocal key
+        if isinstance(node, dict):
+            if "w" in node and getattr(node["w"], "ndim", 0) == 2:
+                p = "/".join(path)
+                if compressible(tuple(path), node["w"].shape) and (
+                        method in ("lora", "pissa") or p in r_factors):
+                    key, sk = jax.random.split(key)
+                    rf = r_factors.get(p)
+                    w_res, b_t, a_t = _init_one(node["w"], rf, method,
+                                                rank, sk)
+                    return ({"w": w_res, "b_t": b_t, "a_t": a_t},
+                            {"w": False, "b_t": True, "a_t": True})
+            if isinstance(node, dict):
+                out = [walk(v, path + [k]) for k, v in node.items()]
+                return ({k: o[0] for k, o in zip(node, out)},
+                        {k: o[1] for k, o in zip(node, out)})
+        if isinstance(node, list):
+            out = [walk(v, path + [str(i)]) for i, v in enumerate(node)]
+            return [o[0] for o in out], [o[1] for o in out]
+        return node, False
+
+    return walk(params, [])
+
+
+def init_adapters(params, r_factors: Dict[str, jax.Array], *, method: str,
+                  rank: int, seed: int = 0):
+    """Returns (new_params, trainable_mask) — mask True on adapter leaves.
+
+    Scanned-block params (stacked leading layer dim) are handled per-rep:
+    slice, initialize, re-stack — each layer gets its own subspace/R."""
+    key = jax.random.PRNGKey(seed)
+    flat_rf = {p: r for p, r in r_factors.items()
+               if not p.startswith("blocks/")}
+    blk_rf: Dict[int, Dict[str, jax.Array]] = {}
+    for p, r in r_factors.items():
+        if p.startswith("blocks/"):
+            _, rep, rest = p.split("/", 2)
+            blk_rf.setdefault(int(rep), {})[rest] = r
+
+    top = {k: v for k, v in params.items() if k != "blocks"}
+    new_top, mask_top = _init_flat(top, flat_rf, method, rank, key)
+    new_params = dict(new_top)
+    mask = dict(mask_top)
+
+    if "blocks" in params:
+        n_rep = jax.tree.leaves(params["blocks"])[0].shape[0]
+        slices, mask_blk = [], None
+        for r in range(n_rep):
+            blk = jax.tree.map(lambda a: a[r], params["blocks"])
+            nb, mb = _init_flat(blk, blk_rf.get(r, {}), method, rank,
+                                jax.random.fold_in(key, r))
+            slices.append(nb)
+            mask_blk = mb
+        new_params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *slices)
+        mask["blocks"] = mask_blk
+    return new_params, mask
+
+
+def merge_adapters(params):
+    """Fold b_t·a_t back into w (deployment form)."""
+    def walk(node):
+        if isinstance(node, dict):
+            if "w" in node and "b_t" in node:
+                w = node["w"] + (node["b_t"] @ node["a_t"]).astype(node["w"].dtype)
+                return {"w": w}
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        return node
+    return walk(params)
+
+
+def mask_grads(grads, mask):
+    """Zero gradients on frozen leaves (adapter-only fine-tuning)."""
+    return jax.tree.map(lambda g, m: g if m else jnp.zeros_like(g),
+                        grads, mask)

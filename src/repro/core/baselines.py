@@ -1,0 +1,88 @@
+"""Baselines the paper compares against (Appendix B + §2).
+
+All are implemented *faithfully*, including their numerically fragile steps
+(explicit Gram matrices, Cholesky of possibly-singular XXᵀ, inversion of
+small singular values) — reproducing those failure modes is part of the
+paper's Figure 1 / Example G.1 story.
+
+  * ``svd_llm``      — Algorithm 3 [Wang et al. '25]: Cholesky of XXᵀ.
+  * ``svd_llm_v2``   — Algorithm 4 [Wang et al. '25]: SVD of XXᵀ, S^{-1/2}.
+  * ``asvd``         — activation-aware scaling [Yuan et al.]: diagonal S from
+                       mean |activation| per channel (suboptimal but robust).
+  * ``plain_svd``    — context-free Eckart–Young–Mirsky on W.
+  * ``corda``        — CorDA [Yang et al. '24]: α=2 Gram-squared weighting with
+                       explicit inversion (Remark 1's fragile form).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _svd_trunc(m: jax.Array, rank: int):
+    u, s, vt = jnp.linalg.svd(m, full_matrices=False)
+    return u[:, :rank], s[:rank], vt[:rank, :]
+
+
+@partial(jax.jit, static_argnames=("rank",))
+def svd_llm(w: jax.Array, gram: jax.Array, rank: int) -> Tuple[jax.Array, jax.Array]:
+    """SVD-LLM (Appendix B, Algorithm 3). gram = XXᵀ.
+
+    S = chol(XXᵀ) (upper, i.e. XXᵀ = SᵀS ... the paper uses S with W S then
+    B = Σ_r V_rᵀ S^{-1}). On singular/indefinite Gram matrices Cholesky
+    produces NaNs — faithfully kept.
+    """
+    # jnp.linalg.cholesky returns lower L with L Lᵀ = G; the algorithm's upper
+    # triangular S is Lᵀ.
+    s_factor = jnp.linalg.cholesky(gram).T
+    u, s, vt = _svd_trunc(w @ s_factor.T, rank)  # W·Sᵀ: (m,n)  [SᵀS = G]
+    a = u
+    # B = Σ_r V_rᵀ S^{-T}: solve instead of explicit inverse (best practice,
+    # still Gram/Cholesky-based as in the original method).
+    b = jax.scipy.linalg.solve_triangular(s_factor, (s[:, None] * vt).T,
+                                          lower=False, trans="T").T
+    return a, b
+
+
+@partial(jax.jit, static_argnames=("rank",))
+def svd_llm_v2(w: jax.Array, gram: jax.Array, rank: int) -> Tuple[jax.Array, jax.Array]:
+    """SVD-LLM v2 (Appendix B, Algorithm 4): eigendecompose XXᵀ, use S^{±1/2}."""
+    us, sv, _ = jnp.linalg.svd(gram)             # G = Us diag(sv) Usᵀ
+    m = w @ (us * jnp.sqrt(sv)[None, :])         # W Us S^{1/2}
+    u, s, vt = _svd_trunc(m, rank)
+    inv_sqrt = jnp.where(sv > 0, 1.0 / jnp.sqrt(sv), 0.0)  # blows up when tiny
+    b = (s[:, None] * vt) @ (us * inv_sqrt[None, :]).T
+    return u, b
+
+
+@partial(jax.jit, static_argnames=("rank", "alpha"))
+def asvd(w: jax.Array, x: jax.Array, rank: int, alpha: float = 0.5
+         ) -> Tuple[jax.Array, jax.Array]:
+    """ASVD: W ≈ (W S) S^{-1} with diagonal S_ii = (mean_k |X_ik|)^alpha."""
+    act = jnp.mean(jnp.abs(x), axis=1)           # (n,)
+    scale = jnp.maximum(act, 1e-6) ** alpha
+    u, s, vt = _svd_trunc(w * scale[None, :], rank)
+    b = (s[:, None] * vt) / scale[None, :]
+    return u, b
+
+
+@partial(jax.jit, static_argnames=("rank",))
+def plain_svd(w: jax.Array, rank: int) -> Tuple[jax.Array, jax.Array]:
+    """Context-free EYM truncation of W itself."""
+    u, s, vt = _svd_trunc(w, rank)
+    return u, s[:, None] * vt
+
+
+@partial(jax.jit, static_argnames=("rank",))
+def corda(w: jax.Array, x: jax.Array, rank: int) -> Tuple[jax.Array, jax.Array]:
+    """CorDA (Remark 1): W' = U_r Σ_r V_rᵀ (XXᵀ)^{-1} from SVD of W·XXᵀ.
+
+    The explicit Gram inverse is the fragile step COALA α=2 removes.
+    """
+    gram = x @ x.T
+    u, s, vt = _svd_trunc(w @ gram, rank)
+    b = jnp.linalg.solve(gram.T, (s[:, None] * vt).T).T
+    return u, b

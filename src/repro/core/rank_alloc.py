@@ -1,0 +1,85 @@
+"""Adaptive per-layer rank allocation (beyond-paper extension).
+
+The paper compresses every layer at the same ratio (Tables 2–3 note "without
+adaptive rank selection"). Given the per-layer R factors COALA already
+computes, the optimal rank split under a global parameter budget has a
+closed greedy solution: the exact weighted-error reduction of granting a
+layer one more rank is σ_{r+1}²(W Rᵀ) (Eckart–Young on the weighted
+problem), at a parameter cost of (d_in + d_out). Water-filling on the
+gain/cost ratio is optimal because singular values are sorted, so marginal
+gains are non-increasing.
+
+Scan-stacked layers add a structural constraint: every rep of the same
+layer position must get the SAME rank (the factored params restack into one
+scanned tensor). Those reps form one allocation group: granting the group
++1 rank costs n_rep·(d_in+d_out) and gains Σ_rep σ_{r+1,rep}².
+"""
+from __future__ import annotations
+
+import heapq
+import re
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+_STACK_RE = re.compile(r"^(blocks|enc|dec)/\d+/")
+
+
+def default_group(path: str) -> str:
+    """'blocks/3/sub0/mixer/wq' -> 'blocks/*/sub0/mixer/wq'."""
+    return _STACK_RE.sub(lambda m: f"{m.group(1)}/*/", path)
+
+
+def adaptive_rank_map(params_weights: Dict[str, object], r_factors,
+                      ratio: float, *, min_rank: int = 1,
+                      group_fn: Optional[Callable[[str], str]] = None
+                      ) -> Dict[str, int]:
+    """Returns {path: rank} meeting budget = ratio × Σ dense params."""
+    group_fn = group_fn or default_group
+    groups: Dict[str, list] = {}
+    for p in params_weights:
+        groups.setdefault(group_fn(p), []).append(p)
+
+    gains: Dict[str, object] = {}       # per-group Σ_rep σ² (sorted desc)
+    dims: Dict[str, Tuple[int, int, int]] = {}
+    total_dense = 0
+    for g, paths in groups.items():
+        sq = None
+        for p in paths:
+            w = params_weights[p]
+            r = r_factors[p]
+            m = w.T.astype(jnp.float32) @ r.T.astype(jnp.float32)
+            s2 = jnp.linalg.svd(m, compute_uv=False) ** 2
+            sq = s2 if sq is None else sq + s2
+        d_in, d_out = params_weights[paths[0]].shape
+        dims[g] = (d_in, d_out, len(paths))
+        gains[g] = sq
+        total_dense += d_in * d_out * len(paths)
+    budget = int(ratio * total_dense)
+
+    ranks: Dict[str, int] = {}
+    heap = []
+    spent = 0
+    for g, sq in gains.items():
+        d_in, d_out, n = dims[g]
+        cost = (d_in + d_out) * n
+        r0 = min(min_rank, len(sq))
+        ranks[g] = r0
+        spent += r0 * cost
+        if r0 < min(len(sq), d_in, d_out):
+            heapq.heappush(heap, (-float(sq[r0]) / cost, g, r0))
+    while heap:
+        _, g, r = heapq.heappop(heap)
+        if ranks[g] != r:
+            continue                     # stale entry
+        d_in, d_out, n = dims[g]
+        cost = (d_in + d_out) * n
+        if spent + cost > budget:
+            continue                     # try cheaper groups
+        ranks[g] = r + 1
+        spent += cost
+        sq = gains[g]
+        if r + 1 < min(len(sq), d_in, d_out):
+            heapq.heappush(heap, (-float(sq[r + 1]) / cost, g, r + 1))
+
+    return {p: ranks[group_fn(p)] for p in params_weights}

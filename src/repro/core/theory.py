@@ -1,0 +1,54 @@
+"""Theoretical quantities from the paper: gaps, bounds, projector distances.
+
+Used by tests (the bound must hold empirically) and by the compression driver
+(the Thm. 1 estimate informs μ selection sensitivity, §5 of the paper).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def singular_gap(m: jax.Array, rank: int) -> jax.Array:
+    """σ_r(M) − σ_{r+1}(M)."""
+    s = jnp.linalg.svd(m, compute_uv=False)
+    return s[rank - 1] - s[rank]
+
+
+def thm1_bound(w: jax.Array, x: jax.Array, rank: int, mu: float) -> jax.Array:
+    """Theorem 1: ||W₀ − W_μ||_F ≤ 2‖W‖₂²‖W‖_F / (σ_r²−σ_{r+1}²)(WX) · μ.
+
+    Holds with NO full-rank assumption on X (the degenerate/limited-data case).
+    """
+    s = jnp.linalg.svd(w @ x, compute_uv=False)
+    gap2 = s[rank - 1] ** 2 - s[rank] ** 2
+    w2 = jnp.linalg.norm(w, ord=2)
+    return 2.0 * w2 ** 2 * jnp.linalg.norm(w) / gap2 * mu
+
+
+def thm5_bound(w: jax.Array, x: jax.Array, rank: int, mu: float) -> jax.Array:
+    """Theorem 5 (full-row-rank X): ‖W‖₂‖W‖_F /(σ_r−σ_{r+1})(WX) · μ/σ_n(X)."""
+    s_wx = jnp.linalg.svd(w @ x, compute_uv=False)
+    gap = s_wx[rank - 1] - s_wx[rank]
+    sx = jnp.linalg.svd(x, compute_uv=False)
+    return jnp.linalg.norm(w, ord=2) * jnp.linalg.norm(w) / gap * mu / sx[-1]
+
+
+def projector_distance(u_a: jax.Array, u_b: jax.Array) -> jax.Array:
+    """‖U_a U_aᵀ − U_b U_bᵀ‖₂ (Davis–Kahan–Wedin quantity, Thm. 4)."""
+    p = u_a @ u_a.T - u_b @ u_b.T
+    return jnp.linalg.norm(p, ord=2)
+
+
+def relative_weighted_error(w: jax.Array, w_approx: jax.Array, x: jax.Array
+                            ) -> jax.Array:
+    """||(W−W')X||_F / ||WX||_F — Figure 1's y-axis."""
+    return jnp.linalg.norm((w - w_approx) @ x) / jnp.linalg.norm(w @ x)
+
+
+def optimal_weighted_error(w: jax.Array, x: jax.Array, rank: int) -> jax.Array:
+    """The attainable minimum of ||(W−W')X||_F = sqrt(Σ_{i>r} σ_i²(WX))."""
+    s = jnp.linalg.svd(w @ x, compute_uv=False)
+    return jnp.sqrt(jnp.sum(s[rank:] ** 2))

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the perf-critical hot spots (+ ops.py wrappers,
+ref.py oracles). Validated in interpret=True mode on CPU."""
+from repro.kernels import ops, ref  # noqa: F401

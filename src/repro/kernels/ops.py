@@ -1,0 +1,32 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On the CPU container the kernels execute in ``interpret=True`` mode (the
+kernel body runs as traced JAX ops — bit-for-bit the same program the Mosaic
+compiler would lower on TPU). On TPU they compile natively.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gram_accum as _ga
+from repro.kernels import lowrank_linear as _ll
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def lowrank_linear(x, b_t, a_t, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _ll.lowrank_linear(x, b_t, a_t, **kw)
+
+
+def gram_accum(a, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _ga.gram_accum(a, **kw)
+
+
+def flash_attention(q, k, v, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _fa.flash_attention(q, k, v, **kw)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lowrank_linear_ref(x, b_t, a_t):
+    """y = (x @ b_t) @ a_t — COALA factored linear. x: (..., d_in)."""
+    return (x @ b_t) @ a_t
+
+
+def gram_accum_ref(chunks):
+    """G = Σ_c cᵀ c over token chunks (rows of Xᵀ). chunks: (p, k, n) or list."""
+    g = None
+    for c in chunks:
+        contrib = c.T.astype(jnp.float32) @ c.astype(jnp.float32)
+        g = contrib if g is None else g + contrib
+    return g
+
+
+def flash_attention_ref(q, k, v, *, scale=None, cap: float = 0.0,
+                        causal: bool = True):
+    """q: (B, T, Hq, hd), k/v: (B, T, Hkv, hd) with Hq % Hkv == 0."""
+    b, t, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+    qg = q.reshape(b, t, hkv, g, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    if cap > 0:
+        s = cap * jnp.tanh(s / cap)
+    if causal:
+        i, j = jnp.arange(t), jnp.arange(t)
+        s = jnp.where(i[:, None] >= j[None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+    return o.reshape(b, t, hq, hd)

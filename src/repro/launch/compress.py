@@ -1,0 +1,82 @@
+"""Compression launcher: calibrate → COALA/baseline → evaluate → save.
+
+On a mesh, calibration uses the distributed butterfly TSQR over the data
+axis (core/tsqr.distributed_tsqr_r); on a single device it streams through
+the RStreamer. Either way the full activation matrix X never exists.
+
+  PYTHONPATH=src python -m repro.launch.compress --arch llama3_1b --smoke \
+      --method coala --ratio 0.6 --lam 4
+"""
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import CompressConfig, TrainConfig
+from repro.configs import get_config, get_smoke_config
+from repro.core.calibrate import calibrate_model
+from repro.core.compress import compress_model, compression_summary
+from repro.ckpt import CheckpointManager
+from repro.data import DataConfig, TokenPipeline
+from repro.models import build_model
+from repro.models.common import CPU_CTX
+from repro.train.train_loop import make_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3_1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--method", default="coala",
+                    choices=["coala", "svd", "svd_llm", "svd_llm_v2", "asvd"])
+    ap.add_argument("--ratio", type=float, default=0.6)
+    ap.add_argument("--lam", type=float, default=4.0)
+    ap.add_argument("--mu", type=float, default=-1.0)
+    ap.add_argument("--rsvd", action="store_true")
+    ap.add_argument("--calib-batches", type=int, default=4)
+    ap.add_argument("--pretrain-steps", type=int, default=100,
+                    help="train a base model first (no public weights offline)")
+    ap.add_argument("--ckpt-in", default="", help="restore base model instead")
+    ap.add_argument("--ckpt-out", default="")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                    global_batch=8, seed=11), cfg)
+
+    tcfg = TrainConfig(lr=3e-3, warmup_steps=5, total_steps=args.pretrain_steps,
+                       schedule="cosine", compute_dtype="float32")
+    state = make_train_state(model, tcfg, jax.random.PRNGKey(0))
+    if args.ckpt_in:
+        state, _ = CheckpointManager(args.ckpt_in).restore(state)
+    else:
+        step = jax.jit(make_train_step(model, tcfg, CPU_CTX))
+        for i in range(args.pretrain_steps):
+            state, _ = step(state, pipe.get_batch(i))
+    params = state["params"]
+
+    def eval_ce(p):
+        return float(np.mean([float(model.loss(p, pipe.get_batch(1000 + i),
+                                               compute_dtype=jnp.float32)[0])
+                              for i in range(4)]))
+
+    base_ce = eval_ce(params)
+    cal = calibrate_model(model, params,
+                          [pipe.get_batch(2000 + i)
+                           for i in range(args.calib_batches)])
+    ccfg = CompressConfig(method=args.method, ratio=args.ratio, lam=args.lam,
+                          mu=args.mu, use_rsvd=args.rsvd)
+    cparams, reports = compress_model(model, params, cal, ccfg)
+    s = compression_summary(reports)
+    s.update(method=args.method, base_ce=base_ce, compressed_ce=eval_ce(cparams))
+    print(json.dumps(s, indent=1))
+    if args.ckpt_out:
+        CheckpointManager(args.ckpt_out).save(0, {"params": cparams})
+        print("saved to", args.ckpt_out)
+
+
+if __name__ == "__main__":
+    main()

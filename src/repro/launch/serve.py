@@ -1,0 +1,59 @@
+"""Serving launcher: batched generation with an optionally COALA-compressed
+model (the paper's deployment target).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm_135m --smoke \
+      --compress-ratio 0.6 --requests 4 --new-tokens 16
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import CompressConfig
+from repro.configs import get_config, get_smoke_config
+from repro.core.calibrate import calibrate_model
+from repro.core.compress import compress_model, compression_summary
+from repro.data import DataConfig, TokenPipeline
+from repro.models import build_model
+from repro.serve import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_135m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--compress-ratio", type=float, default=0.0)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                    seq_len=args.prompt_len,
+                                    global_batch=args.requests), cfg)
+
+    if args.compress_ratio > 0:
+        cal = calibrate_model(model, params,
+                              [pipe.get_batch(i) for i in range(2)])
+        params, reports = compress_model(
+            model, params, cal,
+            CompressConfig(method="coala", ratio=args.compress_ratio,
+                           lam=4.0, mu=-1.0))
+        print("compression:", compression_summary(reports))
+
+    eng = ServeEngine(model, params, compute_dtype=jnp.float32,
+                      cache_dtype=jnp.float32)
+    batch = pipe.get_batch(0)
+    extras = {k: v for k, v in batch.items() if k != "tokens"}
+    out = eng.generate(batch["tokens"], max_new_tokens=args.new_tokens,
+                       extras=extras or None, temperature=args.temperature)
+    print(f"served {args.requests} requests x {args.new_tokens} tokens")
+    print(out[:, -args.new_tokens:])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Model substrate: build any assigned architecture from its ModelConfig."""
+from repro.config import ModelConfig
+from repro.models.transformer import LM, build_lm
+from repro.models.encdec import EncDecLM, build_encdec
+from repro.models.common import ParallelCtx, CPU_CTX  # noqa: F401
+
+
+def build_model(cfg: ModelConfig):
+    """Returns an LM or EncDecLM with a uniform init/loss/prefill/decode API."""
+    if cfg.family == "encdec":
+        return build_encdec(cfg)
+    return build_lm(cfg)

@@ -1,0 +1,212 @@
+"""Whisper-style encoder–decoder backbone (conv/audio frontend stubbed).
+
+Per the assignment, the modality frontend is a STUB: inputs are precomputed
+frame embeddings (B, n_audio_frames, d_model). The transformer backbone is
+real: sinusoidal-position encoder (non-causal self-attn), learned-position
+decoder (causal self-attn + cross-attn + MLP), both scanned over layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as attn
+from repro.models import ffn as ffn_lib
+from repro.models.common import CPU_CTX, ParallelCtx, constrain_act, rmsnorm, \
+    rmsnorm_init, dense_init, split_key
+from repro.models.linear import linear_apply
+
+
+def sinusoids(length: int, channels: int):
+    log_timescale = math.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2, dtype=jnp.float32))
+    ang = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+def _enc_layer_init(key, cfg, dtype):
+    k1, k2 = split_key(key, 2)
+    return {"norm1": rmsnorm_init(cfg.d_model), "attn": attn.gqa_init(k1, cfg, dtype),
+            "norm2": rmsnorm_init(cfg.d_model),
+            "mlp": ffn_lib.mlp_init(k2, cfg.d_model, cfg.d_ff, glu=False, dtype=dtype)}
+
+
+def _dec_layer_init(key, cfg, dtype):
+    k1, k2, k3 = split_key(key, 3)
+    return {"norm1": rmsnorm_init(cfg.d_model), "self": attn.gqa_init(k1, cfg, dtype),
+            "norm2": rmsnorm_init(cfg.d_model),
+            "cross": attn.cross_attn_init(k2, cfg, dtype),
+            "norm3": rmsnorm_init(cfg.d_model),
+            "mlp": ffn_lib.mlp_init(k3, cfg.d_model, cfg.d_ff, glu=False, dtype=dtype)}
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecLM:
+    cfg: ModelConfig
+
+    @property
+    def n_enc(self):
+        return self.cfg.n_enc_layers or self.cfg.n_layers
+
+    def init(self, key, dtype=jnp.float32):
+        cfg = self.cfg
+        ks = split_key(key, 3 + self.n_enc + cfg.n_layers)
+        params: Dict[str, Any] = {
+            "embed": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                                        jnp.float32) * 0.02).astype(dtype),
+            "pos_dec": (jax.random.normal(ks[1], (cfg.max_seq_len, cfg.d_model),
+                                          jnp.float32) * 0.02).astype(dtype),
+            "enc_final_norm": rmsnorm_init(cfg.d_model),
+            "dec_final_norm": rmsnorm_init(cfg.d_model),
+        }
+        enc = [_enc_layer_init(ks[3 + i], cfg, dtype) for i in range(self.n_enc)]
+        dec = [_dec_layer_init(ks[3 + self.n_enc + i], cfg, dtype)
+               for i in range(cfg.n_layers)]
+        params["enc"] = jax.tree.map(lambda *xs: jnp.stack(xs), *enc)
+        params["dec"] = jax.tree.map(lambda *xs: jnp.stack(xs), *dec)
+        return params
+
+    # ------------------------------------------------------------------ enc
+    def encode(self, params, frames, *, ctx: ParallelCtx = CPU_CTX):
+        cfg = self.cfg
+        x = frames + sinusoids(frames.shape[1], cfg.d_model).astype(frames.dtype)
+
+        def body(x, lp):
+            x = constrain_act(x, ctx)
+            h, _ = attn.gqa_apply(cfg, lp["attn"], rmsnorm(lp["norm1"], x),
+                                  ctx=ctx, cos_sin=None, causal=False)
+            x = x + h
+            x = x + ffn_lib.mlp_apply(lp["mlp"], rmsnorm(lp["norm2"], x), "gelu")
+            return constrain_act(x, ctx), None
+
+        x, _ = jax.lax.scan(body, x, params["enc"])
+        return rmsnorm(params["enc_final_norm"], x)
+
+    # ------------------------------------------------------------------ dec
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        one = {"self": attn.gqa_empty_cache(cfg, batch, max_len, dtype),
+               "cross": {"ck": jnp.zeros((batch, cfg.n_audio_frames,
+                                          cfg.n_kv_heads, cfg.head_dim), dtype),
+                         "cv": jnp.zeros((batch, cfg.n_audio_frames,
+                                          cfg.n_kv_heads, cfg.head_dim), dtype)}}
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (self.cfg.n_layers,) + a.shape), one)
+
+    def _decoder(self, params, x, *, ctx, enc_out=None, cache=None, pos=None,
+                 remat: str = "none"):
+        cfg = self.cfg
+
+        def body(x, xs):
+            lp, c = xs if cache is not None else (xs, None)
+            x = constrain_act(x, ctx)
+            h, nc_self = attn.gqa_apply(
+                cfg, lp["self"], rmsnorm(lp["norm1"], x), ctx=ctx, cos_sin=None,
+                cache=None if c is None else c["self"], pos=pos)
+            x = x + h
+            if c is not None and pos is not None:      # decode: cached cross K/V
+                h = attn.cross_attn_apply(cfg, lp["cross"],
+                                          rmsnorm(lp["norm2"], x), ctx=ctx,
+                                          cross_cache=c["cross"])
+                nc_cross = c["cross"]
+            else:
+                h = attn.cross_attn_apply(cfg, lp["cross"],
+                                          rmsnorm(lp["norm2"], x), ctx=ctx,
+                                          enc_out=enc_out)
+                if c is not None:                      # prefill: fill cross cache
+                    nc_cross = attn.cross_cache_from_encoder(
+                        cfg, lp["cross"], enc_out, c["cross"]["ck"].dtype)
+                else:
+                    nc_cross = None
+            x = x + h
+            x = x + ffn_lib.mlp_apply(lp["mlp"], rmsnorm(lp["norm3"], x), "gelu")
+            if cache is not None:
+                return x, {"self": nc_self, "cross": nc_cross}
+            return x, None
+
+        if remat == "full":
+            body = jax.checkpoint(body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        elif remat == "dots":
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+        xs = (params["dec"], cache) if cache is not None else params["dec"]
+        x, new_cache = jax.lax.scan(body, x, xs)
+        return rmsnorm(params["dec_final_norm"], x), new_cache
+
+    def _embed_dec(self, params, tokens, pos0):
+        cfg = self.cfg
+        t = tokens.shape[1]
+        pe = jax.lax.dynamic_slice_in_dim(params["pos_dec"], pos0, t, axis=0)
+        return params["embed"][tokens] + pe[None]
+
+    # ---------------------------------------------------------- calibration
+    def capture_forward(self, params, batch, calibrator, *,
+                        ctx: ParallelCtx = CPU_CTX, compute_dtype=jnp.float32):
+        """Unrolled-eager forward streaming linear inputs into R factors.
+
+        Cross-attention K/V layers see encoder outputs as X (the COALA
+        weighted norm for those weights is over encoder activations)."""
+        cfg = self.cfg
+        frames = batch["frames"].astype(compute_dtype)
+        x = frames + sinusoids(frames.shape[1], cfg.d_model).astype(frames.dtype)
+        for i in range(self.n_enc):
+            lp = calibrator.wrap(jax.tree.map(lambda a: a[i], params["enc"]),
+                                 f"enc/{i}")
+            h, _ = attn.gqa_apply(cfg, lp["attn"], rmsnorm(lp["norm1"], x),
+                                  ctx=ctx, cos_sin=None, causal=False)
+            x = x + h
+            x = x + ffn_lib.mlp_apply(lp["mlp"], rmsnorm(lp["norm2"], x),
+                                      "gelu")
+        enc_out = rmsnorm(params["enc_final_norm"], x)
+        x = self._embed_dec(params, batch["tokens"], 0).astype(compute_dtype)
+        for i in range(cfg.n_layers):
+            lp = calibrator.wrap(jax.tree.map(lambda a: a[i], params["dec"]),
+                                 f"dec/{i}")
+            h, _ = attn.gqa_apply(cfg, lp["self"], rmsnorm(lp["norm1"], x),
+                                  ctx=ctx, cos_sin=None)
+            x = x + h
+            x = x + attn.cross_attn_apply(cfg, lp["cross"],
+                                          rmsnorm(lp["norm2"], x), ctx=ctx,
+                                          enc_out=enc_out)
+            x = x + ffn_lib.mlp_apply(lp["mlp"], rmsnorm(lp["norm3"], x),
+                                      "gelu")
+        return rmsnorm(params["dec_final_norm"], x)
+
+    # ------------------------------------------------------------------ api
+    def loss(self, params, batch, *, ctx: ParallelCtx = CPU_CTX,
+             remat: str = "none", compute_dtype=jnp.bfloat16, loss_chunk: int = 512):
+        tokens = batch["tokens"]
+        frames = batch["frames"].astype(compute_dtype)
+        enc_out = self.encode(params, frames, ctx=ctx)
+        x = self._embed_dec(params, tokens, 0).astype(compute_dtype)
+        h, _ = self._decoder(params, x, ctx=ctx, enc_out=enc_out, remat=remat)
+        from repro.models.transformer import chunked_ce
+        ce = chunked_ce(h[:, :-1], tokens[:, 1:], params["embed"].T,
+                        chunk=loss_chunk)
+        return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+    def prefill(self, params, tokens, cache, *, frames=None,
+                ctx: ParallelCtx = CPU_CTX, compute_dtype=jnp.bfloat16, **_):
+        enc_out = self.encode(params, frames.astype(compute_dtype), ctx=ctx)
+        x = self._embed_dec(params, tokens, 0).astype(compute_dtype)
+        h, cache = self._decoder(params, x, ctx=ctx, enc_out=enc_out, cache=cache)
+        logits = (h[:, -1:] @ params["embed"].T.astype(h.dtype)).astype(jnp.float32)
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache, pos, *,
+                    ctx: ParallelCtx = CPU_CTX, compute_dtype=jnp.bfloat16):
+        x = self._embed_dec(params, tokens, pos).astype(compute_dtype)
+        h, cache = self._decoder(params, x, ctx=ctx, cache=cache, pos=pos)
+        logits = (h @ params["embed"].T.astype(h.dtype)).astype(jnp.float32)
+        return logits[:, 0], cache
+
+
+def build_encdec(cfg: ModelConfig) -> EncDecLM:
+    return EncDecLM(cfg)

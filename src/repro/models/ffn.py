@@ -1,0 +1,208 @@
+"""FFN family: GLU MLPs and Mixture-of-Experts.
+
+MoE uses token-choice top-k routing with per-expert capacity (drop policy),
+in two execution modes with identical math:
+
+  * local   — single device, vmap over all experts (CPU tests / no mesh)
+  * sharded — expert-parallel ``shard_map`` over the ``model`` mesh axis:
+              tokens stay put (replicated within a model row, as in Megatron
+              TP), each device routes to its E/model local experts, partial
+              outputs combine with the same ``psum`` dense TP already pays.
+              No all-to-all, no token shuffling across the data axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ParallelCtx, act_fn, dense_init, split_key
+from repro.models.linear import linear_apply
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, *, glu: bool = True, dtype=jnp.float32):
+    ks = split_key(key, 3)
+    p = {"up": {"w": dense_init(ks[0], d_model, d_ff, dtype)},
+         "down": {"w": dense_init(ks[1], d_ff, d_model, dtype)}}
+    if glu:
+        p["gate"] = {"w": dense_init(ks[2], d_model, d_ff, dtype)}
+    return p
+
+
+def mlp_apply(params, x, act: str = "silu"):
+    f = act_fn(act)
+    if "gate" in params:
+        h = f(linear_apply(params["gate"], x)) * linear_apply(params["up"], x)
+    else:
+        h = f(linear_apply(params["up"], x))
+    return linear_apply(params["down"], h)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    m = cfg.moe
+    ks = split_key(key, 5)
+    e, f = m.num_experts, m.d_ff_expert
+    std = 1.0 / math.sqrt(d)
+
+    def expert_stack(k, din, dout):
+        return (jax.random.normal(k, (e, din, dout), jnp.float32)
+                * (1.0 / math.sqrt(din))).astype(dtype)
+
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),   # fp32 router
+        "w_gate": expert_stack(ks[1], d, f),
+        "w_up": expert_stack(ks[2], d, f),
+        "w_down": expert_stack(ks[3], f, d),
+    }
+    if m.num_shared > 0:
+        p["shared"] = mlp_init(ks[4], d, m.num_shared * f, glu=True, dtype=dtype)
+    del std
+    return p
+
+
+def _capacity(n_tokens: int, cfg, ctx: ParallelCtx) -> int:
+    m = cfg.moe
+    cf = ctx.moe_capacity_factor or m.capacity_factor
+    cap = max(m.min_capacity,
+              int(math.ceil(m.top_k * n_tokens / m.num_experts * cf)))
+    return min(cap, n_tokens)
+
+
+def _route(x_flat, router_w, cfg):
+    """Returns per-token expert weight matrix gw (N, E) and aux loss scalar."""
+    m = cfg.moe
+    logits = (x_flat.astype(jnp.float32) @ router_w)          # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, m.top_k)              # (N, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    gw = jnp.zeros_like(probs)
+    gw = jnp.take_along_axis(gw, top_i, axis=-1)  # dummy to keep shapes clear
+    gw = jnp.zeros_like(probs).at[
+        jnp.arange(probs.shape[0])[:, None], top_i].set(top_p)
+    # switch-style load-balance aux
+    frac = jnp.mean((gw > 0).astype(jnp.float32), axis=0)     # f_e
+    imp = jnp.mean(probs, axis=0)                             # P_e
+    aux = m.num_experts * jnp.sum(frac * imp)
+    return gw, aux
+
+
+def _expert_ffn(x_e, wg, wu, wd, act):
+    f = act_fn(act)
+
+    def mm(x, w):
+        if isinstance(w, tuple):          # COALA-factored expert: (b_t, a_t)
+            return (x @ w[0]) @ w[1]
+        return x @ w
+
+    h = f(mm(x_e, wg)) * mm(x_e, wu)
+    return mm(h, wd)
+
+
+def _moe_local_math(x_flat, params, cfg, capacity: int, act: str,
+                    e_start: int = 0, e_count: Optional[int] = None,
+                    capture=None):
+    """Route + dispatch + combine over experts [e_start, e_start+e_count)."""
+    n, d = x_flat.shape
+    gw, aux = _route(x_flat, params["router"].astype(jnp.float32), cfg)
+    e_count = e_count if e_count is not None else cfg.moe.num_experts
+    gw_loc = jax.lax.dynamic_slice_in_dim(gw, e_start, e_count, axis=1)  # (N, E_loc)
+    w_sel, idx = jax.lax.top_k(gw_loc.T, capacity)            # (E_loc, C)
+    x_e = x_flat[idx.reshape(-1)].reshape(e_count, capacity, d)
+
+    def slice_w(w):
+        return jax.tree.map(
+            lambda a: jax.lax.dynamic_slice_in_dim(
+                a, e_start, e_count, 0).astype(x_flat.dtype), w)
+
+    wg, wu, wd = (slice_w(params[k]) for k in ("w_gate", "w_up", "w_down"))
+    if capture is not None:                 # eager calibration: per-expert X
+        calib, path = capture
+        f = act_fn(act)
+
+        def mm_e(x, w, e):
+            if isinstance(w, tuple):
+                return (x @ w[0][e]) @ w[1][e]
+            return x @ w[e]
+
+        import numpy as _np
+        for e in range(e_count):
+            mask = _np.asarray(w_sel[e] > 0)
+            x_used = _np.asarray(x_e[e])[mask]
+            if x_used.shape[0]:
+                x_used = jnp.asarray(x_used)
+                calib.record(f"{path}/expert{e_start + e}/in", x_used)
+                h_used = f(mm_e(x_used, wg, e)) * mm_e(x_used, wu, e)
+                calib.record(f"{path}/expert{e_start + e}/hid", h_used)
+    y_e = jax.vmap(_expert_ffn, in_axes=(0, 0, 0, 0, None))(
+        x_e, wg, wu, wd, act)
+    y_e = y_e * w_sel[..., None].astype(y_e.dtype)
+    out = jnp.zeros((n, d), x_flat.dtype)
+    out = out.at[idx.reshape(-1)].add(y_e.reshape(-1, d))
+    return out, aux
+
+
+def moe_apply(cfg, params, x, *, ctx: ParallelCtx) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, T, d) -> (y, aux_loss)."""
+    b, t, d = x.shape
+    m = cfg.moe
+
+    if ctx.mesh is not None and ctx.shard_map_moe:
+        e_loc = m.num_experts // ctx.model_size
+        assert e_loc * ctx.model_size == m.num_experts, \
+            f"experts {m.num_experts} must divide model axis {ctx.model_size}"
+        n_shards = 1
+        for a in ctx.batch_axes:
+            n_shards *= ctx.mesh.shape[a]
+        if b % n_shards:          # tiny-batch decode: replicate tokens instead
+            n_shards = 1
+            bspec = P(None, None, None)
+        else:
+            bspec = P(ctx.batch_axes, None, None)
+        espec = P(ctx.model_axis, None, None)
+        cap = _capacity(b * t // n_shards, cfg, ctx)
+
+        def body(x_loc, router_w, wg, wu, wd):
+            bl, tl, _ = x_loc.shape
+            xf = x_loc.reshape(bl * tl, d)
+            me = jax.lax.axis_index(ctx.model_axis)
+            p_loc = {"router": router_w, "w_gate": wg, "w_up": wu, "w_down": wd}
+            out, aux = _moe_local_math(xf, p_loc, cfg, cap, cfg.act,
+                                       e_start=me * e_loc, e_count=e_loc)
+            out = jax.lax.psum(out, ctx.model_axis)
+            aux = jax.lax.pmean(aux, ctx.model_axis)
+            return out.reshape(bl, tl, d), aux
+
+        def etree(w):                      # dense array or factored tuple
+            return jax.tree.map(lambda _: espec, w)
+
+        y, aux = jax.shard_map(
+            body, mesh=ctx.mesh,
+            in_specs=(bspec, P(), etree(params["w_gate"]),
+                      etree(params["w_up"]), etree(params["w_down"])),
+            out_specs=(bspec, P()), check_vma=False,
+        )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
+    else:
+        cap = _capacity(b * t, cfg, ctx)
+        capture = None
+        from repro.models.linear import CaptureDict
+        if isinstance(params, CaptureDict) and params.calib is not None:
+            capture = (params.calib, params.path)
+        y, aux = _moe_local_math(x.reshape(b * t, d), params, cfg, cap,
+                                 cfg.act, capture=capture)
+        y = y.reshape(b, t, d)
+
+    if "shared" in params:
+        y = y + mlp_apply(params["shared"], x, cfg.act)
+    return y, aux * cfg.moe.aux_loss_weight

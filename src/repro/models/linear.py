@@ -1,0 +1,88 @@
+"""Dense ⟷ low-rank factored linear layers.
+
+COALA's output is a pair (A, B) with W' = A·B. ``FactoredLinear`` is a
+first-class citizen: every projection in the model substrate goes through
+``linear_apply`` which dispatches on the param structure, so a compressed
+model is just a params pytree where some ``{"w": ...}`` leaves were replaced
+by ``{"b_t": ..., "a_t": ...}`` — no model code changes.
+
+Math convention: activations are row vectors, y = x @ W where W: (d_in, d_out).
+COALA operates on the (d_out, d_in) "weight matrix" view W_mat = Wᵀ with
+W_mat' = A·B, so:   y = x @ W' = x @ (A B)ᵀ = (x @ Bᵀ) @ Aᵀ
+and we store  b_t = Bᵀ: (d_in, r),  a_t = Aᵀ: (r, d_out).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def linear_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float = 1.0):
+    return {"w": dense_init(key, d_in, d_out, dtype, scale)}
+
+
+def factored_from_coala(a: jax.Array, b: jax.Array):
+    """Build factored params from COALA (A: (d_out, r), B: (r, d_in))."""
+    return {"b_t": b.T, "a_t": a.T}
+
+
+class CaptureDict(dict):
+    """A linear-layer param dict wrapped for calibration capture.
+
+    ``linear_apply`` records the eager input activations into the attached
+    calibrator's streaming-R accumulator (COALA never stores X itself).
+    Only used in unrolled-eager calibration passes — never under jit/scan.
+    """
+    path: str = ""
+    calib = None
+
+
+def linear_apply(params, x, *, use_kernel: bool = False):
+    """y = x @ W (dense), fused low-rank (x @ Bᵀ) @ Aᵀ, or dense + adapter
+    when both are present (LoRA-style fine-tuning)."""
+    if isinstance(params, CaptureDict) and params.calib is not None:
+        params.calib.record(params.path, x)
+    y = None
+    if "w" in params:
+        y = x @ params["w"].astype(x.dtype)
+        if "b_t" not in params:
+            return y
+    if use_kernel:
+        from repro.kernels import ops as kops
+        lr = kops.lowrank_linear(x, params["b_t"].astype(x.dtype),
+                                 params["a_t"].astype(x.dtype))
+    else:
+        lr = (x @ params["b_t"].astype(x.dtype)) @ params["a_t"].astype(x.dtype)
+    return lr if y is None else y + lr
+
+
+def linear_weight_matrix(params) -> jax.Array:
+    """The (d_out, d_in) matrix-view W_mat for compression (COALA's W)."""
+    if "w" in params:
+        return params["w"].T
+    return (params["b_t"] @ params["a_t"]).T
+
+
+def linear_out_dim(params) -> int:
+    return params["w"].shape[1] if "w" in params else params["a_t"].shape[1]
+
+
+def linear_in_dim(params) -> int:
+    return params["w"].shape[0] if "w" in params else params["b_t"].shape[0]
+
+
+def is_factored(params) -> bool:
+    return "b_t" in params
+
+
+def factored_param_count(d_in: int, d_out: int, rank: int) -> int:
+    return rank * (d_in + d_out)
+
+
+def rank_for_ratio(d_in: int, d_out: int, ratio: float) -> int:
+    """Largest rank whose factored cost ≤ ratio · dense cost (≥1)."""
+    return max(1, int((ratio * d_in * d_out) // (d_in + d_out)))

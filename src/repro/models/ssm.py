@@ -1,0 +1,136 @@
+"""Mamba (selective SSM) block — used by jamba's hybrid stack.
+
+Training/prefill run a ``lax.scan`` over time (sequential recurrence — the
+faithful baseline; a chunked-parallel scan is a §Perf candidate).
+Decode is a single-step state update: cache = {conv window, ssm state} — O(1)
+per token, which is what makes the ``long_500k`` cell feasible.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParallelCtx, chunked_scan, dense_init, split_key
+from repro.models.linear import linear_apply
+
+
+def _d_inner(cfg) -> int:
+    return cfg.mamba.expand * cfg.d_model
+
+
+def _dt_rank(cfg) -> int:
+    return cfg.mamba.dt_rank or math.ceil(cfg.d_model / 16)
+
+
+def mamba_init(key, cfg, dtype=jnp.float32):
+    d, di, ds, dc = cfg.d_model, _d_inner(cfg), cfg.mamba.d_state, cfg.mamba.d_conv
+    dtr = _dt_rank(cfg)
+    ks = split_key(key, 6)
+    return {
+        "in_proj": {"w": dense_init(ks[0], d, 2 * di, dtype)},
+        "conv_w": (jax.random.normal(ks[1], (dc, di), jnp.float32)
+                   / math.sqrt(dc)).astype(dtype),
+        "x_proj": {"w": dense_init(ks[2], di, dtr + 2 * ds, dtype)},
+        "dt_proj": {"w": dense_init(ks[3], dtr, di, dtype)},
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32)
+                             * (math.log(0.1) - math.log(0.001))
+                             + math.log(0.001)), 1e-4))).astype(jnp.float32),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32),
+                                  (di, 1))).astype(jnp.float32),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": {"w": dense_init(ks[5], di, d, dtype)},
+    }
+
+
+def mamba_empty_cache(cfg, batch: int, dtype=jnp.float32):
+    di, ds, dc = _d_inner(cfg), cfg.mamba.d_state, cfg.mamba.d_conv
+    return {"conv": jnp.zeros((batch, dc - 1, di), dtype),
+            "h": jnp.zeros((batch, di, ds), dtype)}
+
+
+def _causal_conv(x, conv_w, prepend=None):
+    """Depthwise causal conv over time. x: (B, T, di), conv_w: (dc, di)."""
+    dc = conv_w.shape[0]
+    if prepend is None:
+        pad = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    else:
+        pad = prepend.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, T+dc-1, di)
+    out = sum(xp[:, i:i + x.shape[1]] * conv_w[i][None, None, :].astype(x.dtype)
+              for i in range(dc))
+    return out, xp[:, -(dc - 1):]                     # y, new conv window
+
+
+def _ssm_params(cfg, params, u):
+    """u: (..., di) -> dt (softplus), B, C."""
+    dtr, ds = _dt_rank(cfg), cfg.mamba.d_state
+    proj = linear_apply(params["x_proj"], u)
+    dt_in, b, c = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(linear_apply(params["dt_proj"], dt_in).astype(jnp.float32)
+                         + params["dt_bias"])
+    return dt, b.astype(jnp.float32), c.astype(jnp.float32)
+
+
+def mamba_apply(cfg, params, x, *, ctx: ParallelCtx, cache=None, pos=None,
+                **_) -> Tuple[jax.Array, Optional[dict]]:
+    b, t, d = x.shape
+    di, ds = _d_inner(cfg), cfg.mamba.d_state
+    xz = linear_apply(params["in_proj"], x)
+    u, z = jnp.split(xz, 2, axis=-1)                  # (B, T, di) each
+    a = -jnp.exp(params["a_log"])                     # (di, ds)
+
+    if cache is not None and pos is not None and t == 1:
+        # --- decode: O(1) state update ---------------------------------
+        conv_win = jnp.concatenate([cache["conv"].astype(u.dtype), u], axis=1)
+        cw = params["conv_w"].astype(u.dtype)
+        u_c = jax.nn.silu(jnp.einsum("bci,ci->bi", conv_win, cw))[:, None, :]
+        dt, bb, cc = _ssm_params(cfg, params, u_c)    # dt (B,1,di), bb/cc (B,1,ds)
+        da = jnp.exp(dt[:, 0, :, None] * a[None])     # (B, di, ds)
+        h = cache["h"].astype(jnp.float32) * da + \
+            dt[:, 0, :, None] * bb[:, 0, None, :] * u_c[:, 0, :, None].astype(jnp.float32)
+        y = jnp.einsum("bis,bs->bi", h, cc[:, 0]) + \
+            params["d_skip"] * u_c[:, 0].astype(jnp.float32)
+        y = y[:, None, :].astype(x.dtype)
+        new_cache = {"conv": conv_win[:, 1:].astype(cache["conv"].dtype),
+                     "h": h.astype(cache["h"].dtype)}
+    else:
+        # --- train/prefill: chunk-rematerialized selective scan ----------
+        # Per-step quantities (dt, exp(dt·A), dt·B·u — each (B, di, ds)-sized
+        # transients) are computed INSIDE the chunked scan so they are
+        # rematerialized in backward instead of stored for all T steps.
+        prepend = cache["conv"] if cache is not None else None
+        u_conv, conv_win = _causal_conv(u, params["conv_w"], prepend)
+        u_c = jax.nn.silu(u_conv)                      # (B, T, di)
+        dtr = _dt_rank(cfg)
+        proj = linear_apply(params["x_proj"], u_c)     # (B, T, dtr+2ds)
+        dt_in, bb, cc = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+
+        h0 = (cache["h"].astype(jnp.float32) if cache is not None
+              else jnp.zeros((b, di, ds), jnp.float32))
+        dt_w = params["dt_proj"]["w"]
+
+        def step(h, inp):
+            u_t, dtin_t, bb_t, cc_t = inp              # (B,di) (B,dtr) (B,ds)²
+            dt_t = jax.nn.softplus((dtin_t @ dt_w.astype(dtin_t.dtype))
+                                   .astype(jnp.float32) + params["dt_bias"])
+            da_t = jnp.exp(dt_t[..., None] * a[None])  # (B, di, ds)
+            h = h * da_t + dt_t[..., None] * bb_t[:, None, :].astype(jnp.float32) \
+                * u_t[..., None].astype(jnp.float32)
+            y_t = jnp.einsum("bis,bs->bi", h, cc_t.astype(jnp.float32))
+            return h, y_t
+
+        xs = tuple(jnp.moveaxis(v, 1, 0) for v in (u_c, dt_in, bb, cc))
+        h_last, ys = chunked_scan(step, h0, xs, chunk=64)
+        y = jnp.moveaxis(ys, 0, 1) + params["d_skip"] * u_c.astype(jnp.float32)
+        y = y.astype(x.dtype)
+        new_cache = None
+        if cache is not None:                         # prefill fills state
+            new_cache = {"conv": conv_win.astype(cache["conv"].dtype),
+                         "h": h_last.astype(cache["h"].dtype)}
+
+    y = y * jax.nn.silu(z)
+    return linear_apply(params["out_proj"], y), new_cache

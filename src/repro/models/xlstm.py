@@ -1,0 +1,259 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Faithful to the xLSTM paper's structure (arXiv:2405.04517): mLSTM is the
+parallelizable matrix-memory cell with exponential gating and max-state
+stabilization; sLSTM is the recurrent scalar-memory cell. Both expose
+recurrent single-step updates, so decode state is O(1) in context length —
+this is why the ``long_500k`` cell runs for xlstm-1.3b.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParallelCtx, chunked_scan, dense_init, split_key
+from repro.models.linear import linear_apply
+
+
+def _mlstm_dims(cfg):
+    di = int(cfg.xlstm.proj_factor * cfg.d_model)
+    h = cfg.n_heads
+    return di, h, di // h
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    di, h, hd = _mlstm_dims(cfg)
+    ks = split_key(key, 8)
+    return {
+        "up": {"w": dense_init(ks[0], d, 2 * di, dtype)},
+        "wq": {"w": dense_init(ks[1], di, di, dtype)},
+        "wk": {"w": dense_init(ks[2], di, di, dtype)},
+        "wv": {"w": dense_init(ks[3], di, di, dtype)},
+        "w_i": dense_init(ks[4], di, h, jnp.float32),
+        "w_f": dense_init(ks[5], di, h, jnp.float32),
+        "f_bias": jnp.full((h,), 3.0, jnp.float32),     # forget-gate bias init
+        "o_norm_scale": jnp.ones((di,), jnp.float32),
+        "down": {"w": dense_init(ks[7], di, d, dtype)},
+    }
+
+
+def mlstm_empty_cache(cfg, batch: int, dtype=jnp.float32):
+    _, h, hd = _mlstm_dims(cfg)
+    return {"c": jnp.zeros((batch, h, hd, hd), dtype),
+            "n": jnp.zeros((batch, h, hd), dtype),
+            "m": jnp.full((batch, h), -1e30, dtype)}
+
+
+def _mlstm_cell(c, n, m, q, k, v, log_i, log_f):
+    """One recurrent step. q/k/v: (B,H,hd); log gates (B,H)."""
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_s = jnp.exp(log_i - m_new)                       # (B,H)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s[..., None, None] * c + i_s[..., None, None] * \
+        (k[..., :, None] * v[..., None, :])            # (B,H,hd_k,hd_v)
+    n_new = f_s[..., None] * n + i_s[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q)),
+                        jnp.exp(-m_new))
+    y = jnp.einsum("bhkv,bhk->bhv", c_new, q) / denom[..., None]
+    return c_new, n_new, m_new, y
+
+
+def _mlstm_chunkwise(q, k, v, log_i, log_f, state, chunk: int):
+    """Chunkwise-parallel mLSTM (beyond-paper TPU adaptation).
+
+    The sequential cell writes the (hd×hd) matrix memory every token —
+    HBM-traffic-bound and MXU-hostile. This form processes chunks of L
+    tokens: intra-chunk work is two (L×L)/(L×hd) matmuls (MXU-friendly),
+    the matrix state is read/written once per chunk (HBM traffic ÷ L).
+    Bit-compatible with the sequential recurrence's stabilization (same
+    m_t = max(a_t + m₀, cummax_s(li_s − a_s) + a_t) telescoping).
+
+    q,k,v: (B,T,H,hd) fp32 (pre-scaled); log gates (B,T,H). Returns
+    (y (B,T,H,hd), final_state).
+    """
+    b, t, h, hd = q.shape
+    n = t // chunk
+
+    def per_chunk(carry, inp):
+        c_st, n_st, m_st = carry               # (B,H,K,V) (B,H,K) (B,H)
+        qc, kc, vc, lic, lfc = inp             # (B,L,H,·)
+        a = jnp.cumsum(lfc, axis=1)            # (B,L,H) inclusive decay
+        a_tot = a[:, -1]                       # (B,H)
+        cmax = jax.lax.cummax(lic - a, axis=1)
+        m_t = jnp.maximum(a + m_st[:, None, :], cmax + a)      # (B,L,H)
+        scale_in = jnp.exp(a + m_st[:, None, :] - m_t)
+        h_inter = jnp.einsum("blhk,bhkv->blhv", qc, c_st) * scale_in[..., None]
+        qn_inter = jnp.einsum("blhk,bhk->blh", qc, n_st) * scale_in
+        # intra-chunk: D_{t,s} = exp(li_s - a_s + a_t - m_t), s <= t
+        logd = ((lic - a)[:, None, :, :] + a[:, :, None, :]
+                - m_t[:, :, None, :])          # (B, Lt, Ls, H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        d = jnp.where(tri[None, :, :, None], jnp.exp(logd), 0.0)
+        s_mat = jnp.einsum("bthk,bshk->btsh", qc, kc) * d
+        h_intra = jnp.einsum("btsh,bshv->bthv", s_mat, vc)
+        qn = qn_inter + jnp.sum(s_mat, axis=2)
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_t))
+        y = (h_inter + h_intra) / denom[..., None]
+        # state to chunk end
+        m_next = jnp.maximum(a_tot + m_st, cmax[:, -1] + a_tot)
+        carry_scale = jnp.exp(a_tot + m_st - m_next)
+        w_out = jnp.exp(lic - a + a_tot[:, None, :] - m_next[:, None, :])
+        c_next = carry_scale[..., None, None] * c_st + jnp.einsum(
+            "bshk,bshv->bhkv", kc * w_out[..., None], vc)
+        n_next = carry_scale[..., None] * n_st + jnp.sum(
+            kc * w_out[..., None], axis=1)
+        return (c_next, n_next, m_next), y
+
+    def resh(x_):
+        return jnp.moveaxis(x_.reshape(b, n, chunk, *x_.shape[2:]), 1, 0)
+
+    (c_f, n_f, m_f), ys = jax.lax.scan(
+        per_chunk, state, tuple(resh(a) for a in (q, k, v, log_i, log_f)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, h, hd)
+    return y, (c_f, n_f, m_f)
+
+
+def mlstm_apply(cfg, params, x, *, ctx: ParallelCtx, cache=None, pos=None,
+                **_) -> Tuple[jax.Array, Optional[dict]]:
+    b, t, d = x.shape
+    di, h, hd = _mlstm_dims(cfg)
+    uz = linear_apply(params["up"], x)
+    u, z = jnp.split(uz, 2, axis=-1)                   # (B,T,di)
+    q = linear_apply(params["wq"], u).reshape(b, t, h, hd) / math.sqrt(hd)
+    k = linear_apply(params["wk"], u).reshape(b, t, h, hd) / math.sqrt(hd)
+    v = linear_apply(params["wv"], u).reshape(b, t, h, hd)
+    log_i = (u.astype(jnp.float32) @ params["w_i"])     # (B,T,H)
+    log_f = jax.nn.log_sigmoid(u.astype(jnp.float32) @ params["w_f"]
+                               + params["f_bias"])
+
+    if cache is not None:
+        c0 = cache["c"].astype(jnp.float32)
+        n0 = cache["n"].astype(jnp.float32)
+        m0 = cache["m"].astype(jnp.float32)
+    else:
+        c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h, hd), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+
+    qf, kf, vf = (a.astype(jnp.float32) for a in (q, k, v))
+
+    if ctx.mlstm_chunkwise and t > 1 and t % cfg.xlstm.chunk_size == 0:
+        y4, (c_f, n_f, m_f) = _mlstm_chunkwise(
+            qf, kf, vf, log_i, log_f, (c0, n0, m0),
+            chunk=cfg.xlstm.chunk_size)
+        y = y4.reshape(b, t, di).astype(x.dtype)
+    else:
+        def step(carry, inp):
+            c, n, m = carry
+            q_t, k_t, v_t, li_t, lf_t = inp
+            c, n, m, y_t = _mlstm_cell(c, n, m, q_t, k_t, v_t, li_t, lf_t)
+            return (c, n, m), y_t
+
+        (c_f, n_f, m_f), ys = chunked_scan(
+            step, (c0, n0, m0),
+            tuple(jnp.moveaxis(a, 1, 0) for a in (qf, kf, vf, log_i, log_f)),
+            chunk=cfg.xlstm.chunk_size)
+        y = jnp.moveaxis(ys, 0, 1).reshape(b, t, di).astype(x.dtype)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": c_f.astype(cache["c"].dtype),
+                     "n": n_f.astype(cache["n"].dtype),
+                     "m": m_f.astype(cache["m"].dtype)}
+
+    # group-norm-ish output scaling, gate, down-projection
+    y = y * params["o_norm_scale"].astype(y.dtype)
+    y = y * jax.nn.silu(z)
+    return linear_apply(params["down"], y), new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg, dtype=jnp.float32):
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    ks = split_key(key, 10)
+    gates = {}
+    for i, g in enumerate(("i", "f", "z", "o")):
+        gates[f"w_{g}"] = {"w": dense_init(ks[i], d, d, dtype)}
+        gates[f"r_{g}"] = (jax.random.normal(ks[4 + i], (h, hd, hd), jnp.float32)
+                           / math.sqrt(hd)).astype(dtype)
+    gates["f_bias"] = jnp.full((d,), 3.0, jnp.float32)
+    ff = int(4 / 3 * d)
+    gates["ff_up"] = {"w": dense_init(ks[8], d, 2 * ff, dtype)}
+    gates["ff_down"] = {"w": dense_init(ks[9], ff, d, dtype)}
+    return gates
+
+
+def slstm_empty_cache(cfg, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), dtype), "n": jnp.zeros((batch, d), dtype),
+            "h": jnp.zeros((batch, d), dtype),
+            "m": jnp.full((batch, d), -1e30, dtype)}
+
+
+def _slstm_scan(cfg, params, x, state):
+    """x: (B,T,d). Recurrent h feeds back through per-head recurrent mats."""
+    b, t, d = x.shape
+    h_heads = cfg.n_heads
+    hd = d // h_heads
+    pre = {g: linear_apply(params[f"w_{g}"], x).astype(jnp.float32)
+           for g in ("i", "f", "z", "o")}
+    pre["f"] = pre["f"] + params["f_bias"]
+    r = {g: params[f"r_{g}"].astype(jnp.float32) for g in ("i", "f", "z", "o")}
+
+    def rec(h_prev, g):                                # (B,d) @ blockdiag R
+        hh = h_prev.reshape(b, h_heads, hd)
+        return jnp.einsum("bhk,hkv->bhv", hh, r[g]).reshape(b, d)
+
+    def step(carry, inp):
+        c, n, h_prev, m = carry
+        pi, pf, pz, po = inp
+        li = pi + rec(h_prev, "i")
+        lf = jax.nn.log_sigmoid(pf + rec(h_prev, "f"))
+        z = jnp.tanh(pz + rec(h_prev, "z"))
+        o = jax.nn.sigmoid(po + rec(h_prev, "o"))
+        m_new = jnp.maximum(lf + m, li)
+        i_s = jnp.exp(li - m_new)
+        f_s = jnp.exp(lf + m - m_new)
+        c_new = f_s * c + i_s * z
+        n_new = f_s * n + i_s
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    state_f, hs = chunked_scan(
+        step, state,
+        tuple(jnp.moveaxis(pre[g], 1, 0) for g in ("i", "f", "z", "o")),
+        chunk=cfg.xlstm.chunk_size)
+    return jnp.moveaxis(hs, 0, 1), state_f             # (B,T,d)
+
+
+def slstm_apply(cfg, params, x, *, ctx: ParallelCtx, cache=None, pos=None,
+                **_) -> Tuple[jax.Array, Optional[dict]]:
+    b, t, d = x.shape
+    if cache is not None:
+        state = tuple(cache[k].astype(jnp.float32) for k in ("c", "n", "h", "m"))
+    else:
+        state = (jnp.zeros((b, d), jnp.float32), jnp.zeros((b, d), jnp.float32),
+                 jnp.zeros((b, d), jnp.float32), jnp.full((b, d), -1e30, jnp.float32))
+    y, state_f = _slstm_scan(cfg, params, x, state)
+    y = y.astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {k: v.astype(cache[k].dtype)
+                     for k, v in zip(("c", "n", "h", "m"), state_f)}
+    # gated feed-forward (proj factor 4/3, GLU)
+    up = linear_apply(params["ff_up"], y)
+    a, g = jnp.split(up, 2, axis=-1)
+    y = linear_apply(params["ff_down"], jax.nn.gelu(a) * g)
+    return y, new_cache

@@ -1,0 +1,99 @@
+"""Render the §Dry-run / §Roofline tables from experiments/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_results(out_dir: str = "experiments/dryrun") -> List[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        parts = os.path.basename(path)[:-5].split("__")
+        r["tag"] = parts[3] if len(parts) > 3 else ""
+        out.append(r)
+    return out
+
+
+def _fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if b < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def roofline_table(results: List[dict], mesh: str = "single",
+                   tag_filter=None) -> str:
+    rows = []
+    header = ("| arch | shape | t_compute | t_memory | t_collective | dominant "
+              "| useful | roofline frac | per-dev mem |")
+    sep = "|" + "---|" * 9
+    for r in results:
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        if r.get("tag") and not tag_filter:
+            continue                      # hillclimb variants listed separately
+        tag = f" [{r['tag']}]" if r.get("tag") else ""
+
+        mem = r.get("memory_stats", {})
+        dev_mem = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0))
+        rows.append(
+            f"| {r['arch']} | {r['shape']}{tag} | {r['t_compute']:.4f}s "
+            f"| {r['t_memory']:.4f}s | {r['t_collective']:.4f}s "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.3f} "
+            f"| {r['roofline_fraction']:.3f} | {_fmt_bytes(dev_mem)} |")
+    return "\n".join([header, sep] + rows)
+
+
+def dryrun_table(results: List[dict]) -> str:
+    header = ("| arch | shape | mesh | status | compile s | per-dev FLOPs "
+              "| per-dev bytes | collective link bytes | collectives |")
+    sep = "|" + "---|" * 9
+    rows = []
+    for r in results:
+        if r.get("tag"):
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r.get('arch')} | {r.get('shape')} "
+                        f"| {r.get('mesh')} | ERROR | | | | | |")
+            continue
+        colls = ", ".join(f"{k}×{int(v['count'])}"
+                          for k, v in sorted(r.get("collectives", {}).items()))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {r.get('t_compile_s', 0):.0f} | {r['flops_per_dev']:.3g} "
+            f"| {_fmt_bytes(r['bytes_per_dev'])} "
+            f"| {_fmt_bytes(r['collective_link_bytes'])} | {colls} |")
+    return "\n".join([header, sep] + rows)
+
+
+def pick_hillclimb_cells(results: List[dict]) -> Dict[str, dict]:
+    """worst roofline fraction (among train), most collective-bound, and the
+    paper-representative compressed-serving cell."""
+    ok = [r for r in results if r.get("status") == "ok"
+          and r.get("mesh") == "single" and not r.get("tag")]
+    train = [r for r in ok if r["shape"] == "train_4k"]
+    worst = min(train, key=lambda r: r["roofline_fraction"])
+    coll = max(ok, key=lambda r: r["t_collective"] /
+               max(r["t_compute"] + r["t_memory"], 1e-12))
+    return {"worst_fraction": worst, "most_collective": coll}
+
+
+if __name__ == "__main__":
+    res = load_results()
+    print("## Dry-run results\n")
+    print(dryrun_table(res))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table(res, "single"))
+    print("\n## Hillclimb variants (tagged)\n")
+    print(roofline_table([r for r in res if r.get("tag")], "single",
+                         tag_filter=True))
+    picks = pick_hillclimb_cells(res)
+    print("\nhillclimb candidates:")
+    for k, r in picks.items():
+        print(f"  {k}: {r['arch']} × {r['shape']} "
+              f"(frac={r['roofline_fraction']:.3f}, dom={r['dominant']})")

@@ -1,0 +1,64 @@
+"""Batched serving engine: jitted prefill + decode with KV-cache reuse.
+
+Greedy or temperature sampling; fixed-batch continuous loop (the multi-pod
+serving dry-run lowers exactly these step functions). Works for decoder-only,
+enc-dec (whisper: frames in, cross-cache built at prefill) and vlm (vision
+prefix at prefill).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import CPU_CTX, ParallelCtx
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    model: object
+    params: object
+    ctx: ParallelCtx = CPU_CTX
+    compute_dtype: object = jnp.bfloat16
+    cache_dtype: object = jnp.bfloat16
+
+    def __post_init__(self):
+        m, ctx, cd = self.model, self.ctx, self.compute_dtype
+        self._prefill = jax.jit(
+            lambda p, tk, c, **kw: m.prefill(p, tk, c, ctx=ctx,
+                                             compute_dtype=cd, **kw))
+        self._decode = jax.jit(
+            lambda p, tk, c, pos: m.decode_step(p, tk, c, pos, ctx=ctx,
+                                                compute_dtype=cd))
+
+    def generate(self, prompt_tokens, max_new_tokens: int, *,
+                 extras: Optional[Dict] = None, temperature: float = 0.0,
+                 seed: int = 0, max_len: Optional[int] = None):
+        """prompt_tokens: (B, T_prompt) int32 -> (B, T_prompt+new) int32."""
+        b, t0 = prompt_tokens.shape
+        total = max_len or (t0 + max_new_tokens)
+        cache = self.model.init_cache(b, total, dtype=self.cache_dtype)
+        kw = dict(extras or {})
+        logits, cache = self._prefill(self.params, prompt_tokens, cache, **kw)
+        logits = logits[:, -1] if logits.ndim == 3 else logits
+        out = [prompt_tokens]
+        key = jax.random.PRNGKey(seed)
+        tok = self._sample(logits, temperature, key)
+        for i in range(max_new_tokens):
+            out.append(tok)
+            if i == max_new_tokens - 1:
+                break
+            pos = jnp.asarray(t0 + i, jnp.int32)
+            logits, cache = self._decode(self.params, tok, cache, pos)
+            key, sk = jax.random.split(key)
+            tok = self._sample(logits, temperature, sk)
+        return jnp.concatenate(out, axis=1)
+
+    @staticmethod
+    def _sample(logits, temperature, key):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature)[:, None] \
+            .astype(jnp.int32)

@@ -1,0 +1,2 @@
+from repro.train.train_loop import make_train_step, make_train_state, cast_for_compute  # noqa: F401
+from repro.train.optimizer import adamw_init, adamw_update, lr_at  # noqa: F401

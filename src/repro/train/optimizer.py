@@ -1,0 +1,93 @@
+"""AdamW (fp32 master) + LR schedules (cosine, WSD, const) — no optax needed.
+
+WSD (warmup–stable–decay) is MiniCPM's schedule [arXiv:2404.06395]: linear
+warmup, long stable plateau, short (decay_frac) 1-sqrt-style decay tail.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def lr_at(tcfg: TrainConfig, step) -> jax.Array:
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.asarray(tcfg.warmup_steps, jnp.float32)
+    total = jnp.asarray(tcfg.total_steps, jnp.float32)
+    base = jnp.asarray(tcfg.lr, jnp.float32)
+    warm_lr = base * jnp.minimum(1.0, (step + 1) / jnp.maximum(warm, 1.0))
+    if tcfg.schedule == "const":
+        return warm_lr
+    if tcfg.schedule == "cosine":
+        t = jnp.clip((step - warm) / jnp.maximum(total - warm, 1.0), 0.0, 1.0)
+        return jnp.where(step < warm, warm_lr,
+                         base * 0.5 * (1.0 + jnp.cos(jnp.pi * t)))
+    if tcfg.schedule == "wsd":
+        decay_steps = jnp.maximum(total * tcfg.decay_frac, 1.0)
+        decay_start = total - decay_steps
+        t = jnp.clip((step - decay_start) / decay_steps, 0.0, 1.0)
+        stable = base
+        decayed = base * (1.0 - jnp.sqrt(t)) + base * 0.1 * jnp.sqrt(t)
+        return jnp.where(step < warm, warm_lr,
+                         jnp.where(step < decay_start, stable, decayed))
+    raise ValueError(f"unknown schedule {tcfg.schedule}")
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda p: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    return {"m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _decay_mask(path) -> bool:
+    """Weight decay on matrices only (no norms/biases/vectors)."""
+    return True
+
+
+def adamw_update(tcfg: TrainConfig, params, grads, opt_state):
+    """Returns (new_params, new_opt_state, lr). All fp32 math."""
+    step = opt_state["step"] + 1
+    lr = lr_at(tcfg, step - 1)
+    b1, b2, eps = tcfg.b1, tcfg.b2, tcfg.eps
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        m_hat = m_new / bc1
+        v_hat = v_new / bc2
+        delta = m_hat / (jnp.sqrt(v_hat) + eps)
+        if p.ndim >= 2:
+            delta = delta + tcfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                        tree), norm

@@ -1,0 +1,95 @@
+"""Adapter initialization (paper §6.2): exactness + trainability invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.adapters import init_adapters, mask_grads, merge_adapters
+from repro.core.calibrate import calibrate_model
+from repro.data import DataConfig, TokenPipeline
+from repro.models import build_model
+from repro.models.linear import linear_apply
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("llama3_1b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                    global_batch=2), cfg)
+    cal = calibrate_model(model, params, [pipe.get_batch(i) for i in range(2)])
+    return cfg, model, params, cal
+
+
+@pytest.mark.parametrize("method", ["pissa", "coala_a1", "coala_a2"])
+def test_merge_recovers_original(setup, method):
+    """W_res + A·B == W exactly for subspace-projection inits."""
+    cfg, model, params, cal = setup
+    new_params, mask = init_adapters(params, cal.r_factors(), method=method,
+                                     rank=4)
+    merged = merge_adapters(new_params)
+
+    def collect_ws(tree, out):
+        if isinstance(tree, dict):
+            if "w" in tree and getattr(tree["w"], "ndim", 0) == 2:
+                out.append(tree["w"])
+            else:
+                for v in tree.values():
+                    collect_ws(v, out)
+        elif isinstance(tree, list):
+            for v in tree:
+                collect_ws(v, out)
+
+    orig, back = [], []
+    collect_ws(params, orig)
+    collect_ws(merged, back)
+    assert len(orig) == len(back)
+    for a, b in zip(orig, back):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_lora_init_preserves_forward(setup):
+    """LoRA starts with B=0, so the adapted model == the base model."""
+    cfg, model, params, cal = setup
+    new_params, _ = init_adapters(params, cal.r_factors(), method="lora",
+                                  rank=4)
+    pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                    global_batch=2), cfg)
+    batch = pipe.get_batch(0)
+    l0, _ = model.loss(params, batch, compute_dtype=jnp.float32)
+    l1, _ = model.loss(new_params, batch, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+
+
+def test_adapter_forward_math():
+    """{"w", "b_t", "a_t"} linear == dense + low-rank sum."""
+    k = jax.random.PRNGKey(0)
+    w = jax.random.normal(k, (8, 6))
+    b_t = jax.random.normal(jax.random.fold_in(k, 1), (8, 2))
+    a_t = jax.random.normal(jax.random.fold_in(k, 2), (2, 6))
+    x = jax.random.normal(jax.random.fold_in(k, 3), (4, 8))
+    got = linear_apply({"w": w, "b_t": b_t, "a_t": a_t}, x)
+    want = x @ w + (x @ b_t) @ a_t
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_grad_mask_freezes_base(setup):
+    cfg, model, params, cal = setup
+    new_params, mask = init_adapters(params, cal.r_factors(),
+                                     method="coala_a1", rank=4)
+    grads = jax.tree.map(jnp.ones_like, new_params)
+    masked = mask_grads(grads, mask)
+    flat = jax.tree_util.tree_flatten_with_path(masked)[0]
+    saw_adapter = saw_frozen = False
+    for path, leaf in flat:
+        keys = [str(getattr(p, "key", "")) for p in path]
+        if keys[-1] in ("b_t", "a_t"):
+            assert float(jnp.abs(leaf).max()) == 1.0
+            saw_adapter = True
+        elif keys[-1] == "w" and leaf.ndim >= 2:
+            if float(jnp.abs(leaf).max()) == 0.0:
+                saw_frozen = True
+    assert saw_adapter and saw_frozen

@@ -1,0 +1,109 @@
+"""Checkpointing: roundtrip, atomicity, keep-k, async, elastic restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager
+
+
+def _state(key=0):
+    k = jax.random.PRNGKey(key)
+    return {"params": {"w": jax.random.normal(k, (8, 8)),
+                       "blocks": [jnp.ones((4,)), jnp.zeros((2, 2))]},
+            "opt": {"step": jnp.asarray(7, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = _state()
+    mgr.save(7, state)
+    restored, meta = mgr.restore(state)
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_and_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(1, _state(1), blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_keep_k_prunes(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _state(s))
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_restore_latest_and_specific(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    s1, s2 = _state(1), _state(2)
+    mgr.save(1, s1)
+    mgr.save(2, s2)
+    r2, _ = mgr.restore(s1)                      # latest = step 2
+    np.testing.assert_array_equal(np.asarray(r2["params"]["w"]),
+                                  np.asarray(s2["params"]["w"]))
+    r1, _ = mgr.restore(s1, step=1)
+    np.testing.assert_array_equal(np.asarray(r1["params"]["w"]),
+                                  np.asarray(s1["params"]["w"]))
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    """tmp dir naming means a crashed write is never listed as a step."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    os.makedirs(os.path.join(str(tmp_path), ".tmp_step_9"))
+    assert mgr.all_steps() == []
+
+
+def test_structure_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _state())
+    with pytest.raises(AssertionError):
+        mgr.restore({"different": jnp.zeros((1,))})
+
+
+def test_elastic_reshard_restore(tmp_path):
+    """Restore a checkpoint saved on one mesh onto a DIFFERENT mesh (elastic
+    up/down-scaling): leaves are stored unsharded and device_put under the
+    new mesh's shardings."""
+    import subprocess
+    import sys
+    import textwrap
+    env_dir = str(tmp_path)
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.ckpt import CheckpointManager
+        mgr = CheckpointManager({env_dir!r}, keep=2)
+        state = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
+        # save from a (4,2) mesh sharding
+        mesh_a = jax.make_mesh((4, 2), ("data", "model"),
+                               axis_types=(jax.sharding.AxisType.Auto,)*2)
+        sharded = jax.device_put(state, {{"w": NamedSharding(
+            mesh_a, P("data", "model"))}})
+        mgr.save(3, sharded)
+        # restore onto a DIFFERENT (2, 4) mesh
+        mesh_b = jax.make_mesh((2, 4), ("data", "model"),
+                               axis_types=(jax.sharding.AxisType.Auto,)*2)
+        restored, meta = mgr.restore(
+            state, shardings={{"w": NamedSharding(mesh_b, P("model", "data"))}})
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(state["w"]))
+        assert restored["w"].sharding.mesh.shape["data"] == 2
+        print("OK")
+    """)
+    env = dict(os.environ)
+    import os as _os
+    repo = _os.path.dirname(_os.path.dirname(_os.path.abspath(__file__)))
+    env["PYTHONPATH"] = _os.path.join(repo, "src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=300)
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout

@@ -1,0 +1,102 @@
+"""Property-based tests (hypothesis) on the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import coala_project, eym_truncate, r_from_x, weighted_error
+from repro.core import baselines, theory, tsqr
+
+SET = dict(max_examples=15, deadline=None)
+
+
+def _arrays(seed, m, n, k):
+    kk = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(kk)
+    w = jax.random.normal(k1, (m, n), jnp.float32)
+    x = jax.random.normal(k2, (n, k), jnp.float32)
+    return w, x
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 10_000), m=st.integers(4, 24), n=st.integers(4, 24),
+       k=st.integers(2, 48), r=st.integers(1, 8))
+def test_coala_attains_theoretical_optimum(seed, m, n, k, r):
+    w, x = _arrays(seed, m, n, k)
+    r = min(r, m, n)
+    err = float(weighted_error(w, coala_project(w, x, rank=r), x))
+    opt = float(theory.optimal_weighted_error(w, x, r))
+    assert err <= opt * (1 + 1e-3) + 1e-4
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 10_000), m=st.integers(6, 20), n=st.integers(6, 20),
+       k=st.integers(6, 40))
+def test_error_monotone_in_rank(seed, m, n, k):
+    w, x = _arrays(seed, m, n, k)
+    errs = [float(weighted_error(w, coala_project(w, x, rank=r), x))
+            for r in (1, 2, 4, min(m, n))]
+    assert all(a >= b - 1e-4 for a, b in zip(errs, errs[1:]))
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 10_000), m=st.integers(6, 20), n=st.integers(6, 20),
+       k=st.integers(6, 40), r=st.integers(1, 6))
+def test_coala_never_worse_than_plain_svd(seed, m, n, k, r):
+    w, x = _arrays(seed, m, n, k)
+    r = min(r, m, n)
+    e_coala = float(weighted_error(w, coala_project(w, x, rank=r), x))
+    a, b = baselines.plain_svd(w, r)
+    e_svd = float(weighted_error(w, a @ b, x))
+    assert e_coala <= e_svd * (1 + 1e-3) + 1e-4
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 10_000), n=st.integers(4, 24),
+       k=st.integers(4, 200), chunks=st.integers(1, 7))
+def test_tsqr_rtr_invariant(seed, n, k, chunks):
+    """RᵀR == XXᵀ regardless of how the token stream is chunked."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, k), jnp.float32)
+    xt = x.T
+    bounds = np.linspace(0, k, chunks + 1).astype(int)
+    parts = [xt[a:b] for a, b in zip(bounds, bounds[1:]) if b > a]
+    r = tsqr.tsqr_sequential(parts)
+    np.testing.assert_allclose(np.asarray(r.T @ r), np.asarray(x @ x.T),
+                               rtol=5e-3, atol=5e-3)
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 10_000), m=st.integers(6, 16), n=st.integers(6, 16),
+       k=st.integers(2, 10), r=st.integers(1, 4))
+def test_projector_idempotent(seed, m, n, k, r):
+    """W'' from re-compressing W' equals W' (projection property)."""
+    w, x = _arrays(seed, m, n, k)
+    r = min(r, m, n)
+    w1 = coala_project(w, x, rank=r)
+    w2 = coala_project(w1, x, rank=r)
+    scale = float(jnp.linalg.norm(w1)) + 1e-6
+    assert float(jnp.linalg.norm(w1 - w2)) <= 5e-3 * scale
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 10_000), m=st.integers(8, 16), n=st.integers(8, 16),
+       k=st.integers(3, 6), r=st.integers(1, 4))
+def test_regularization_shrinks_toward_w(seed, m, n, k, r):
+    """As μ → ∞ the solution approaches the unweighted EYM of W."""
+    w, x = _arrays(seed, m, n, k)
+    r = min(r, m, n)
+    w_big_mu = coala_project(w, x, rank=r, mu=1e6)
+    eym = eym_truncate(w, r)
+    scale = float(jnp.linalg.norm(eym)) + 1e-6
+    assert float(jnp.linalg.norm(w_big_mu - eym)) <= 1e-2 * scale
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 10_000))
+def test_quantization_roundtrip_bounded(seed):
+    from repro.train.grad_compress import simulate_roundtrip
+    g = jax.random.normal(jax.random.PRNGKey(seed), (513,)) * \
+        (10.0 ** ((seed % 7) - 3))
+    rt = simulate_roundtrip(g)
+    rel = float(jnp.linalg.norm(g - rt) / (jnp.linalg.norm(g) + 1e-30))
+    assert rel < 0.02

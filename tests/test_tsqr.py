@@ -1,0 +1,68 @@
+"""TSQR: streaming/tree/sequential equivalence + Gram-free guarantees."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tsqr
+
+
+def _x(key, n, k):
+    return jax.random.normal(jax.random.PRNGKey(key), (n, k), jnp.float32)
+
+
+class TestTSQR:
+    def test_sequential_matches_full_qr(self):
+        x = _x(0, 24, 400)
+        chunks = [x.T[i:i + 64] for i in range(0, 400, 64)]
+        r_seq = tsqr.tsqr_sequential(chunks)
+        r_full = tsqr.qr_r(x.T)
+        np.testing.assert_allclose(np.asarray(r_seq), np.asarray(r_full),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_tree_matches_full_qr(self):
+        x = _x(1, 24, 512)
+        chunks = [x.T[i:i + 64] for i in range(0, 512, 64)]
+        r_tree = tsqr.tsqr_tree(chunks)
+        np.testing.assert_allclose(np.asarray(r_tree), np.asarray(tsqr.qr_r(x.T)),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_streamer_incremental(self):
+        x = _x(2, 16, 300)
+        s = tsqr.RStreamer(16)
+        for i in range(0, 300, 50):
+            s.update(x.T[i:i + 50])
+        assert s.tokens_seen == 300
+        np.testing.assert_allclose(np.asarray(s.finish()),
+                                   np.asarray(tsqr.square_r(tsqr.qr_r(x.T))),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_rtr_equals_gram(self):
+        """RᵀR = XXᵀ — the only property Prop. 2 needs."""
+        x = _x(3, 20, 256)
+        r = tsqr.tsqr_sequential([x.T[i:i + 32] for i in range(0, 256, 32)])
+        np.testing.assert_allclose(np.asarray(r.T @ r), np.asarray(x @ x.T),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_mu_augmentation(self):
+        x = _x(4, 12, 40)
+        r = tsqr.square_r(tsqr.qr_r(x.T))
+        mu = 0.7
+        r_aug = tsqr.augment_r_with_mu(r, mu)
+        want = x @ x.T + mu * jnp.eye(12)
+        np.testing.assert_allclose(np.asarray(r_aug.T @ r_aug), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_fewer_tokens_than_features(self):
+        """Limited-data regime: k < n chunks still give a valid square R."""
+        x = _x(5, 32, 10)
+        r = tsqr.square_r(tsqr.qr_r(x.T))
+        assert r.shape == (32, 32)
+        np.testing.assert_allclose(np.asarray(r.T @ r), np.asarray(x @ x.T),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_gram_chunked_matches(self):
+        x = _x(6, 16, 128)
+        chunks = [x.T[i:i + 32] for i in range(0, 128, 32)]
+        np.testing.assert_allclose(np.asarray(tsqr.gram_chunked(chunks)),
+                                   np.asarray(x @ x.T), rtol=1e-4, atol=1e-4)
