@@ -1,0 +1,12 @@
+"""JAX version-compat helpers for the Pallas TPU kernels."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(**kw):
+    """``pltpu.CompilerParams`` (new JAX) vs ``pltpu.TPUCompilerParams``
+    (<= 0.4.x). Both take the same kwargs."""
+    cls = getattr(pltpu, "CompilerParams", None) or \
+        getattr(pltpu, "TPUCompilerParams")
+    return cls(**kw)

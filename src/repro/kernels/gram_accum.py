@@ -17,7 +17,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import tpu_compiler_params
 
 
 def _kernel(ai_ref, aj_ref, o_ref):
@@ -53,6 +54,6 @@ def gram_accum(a, *, block_i: int = 256, block_j: int = 256,
         out_specs=pl.BlockSpec((bi, bj), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(a, a)

@@ -1,13 +1,23 @@
 """Serving launcher: batched generation with an optionally COALA-compressed
 model (the paper's deployment target).
 
+Fixed-batch (legacy fallback):
+
   PYTHONPATH=src python -m repro.launch.serve --arch smollm_135m --smoke \
       --compress-ratio 0.6 --requests 4 --new-tokens 16
+
+Continuous batching over the paged KV cache — a mixed-length synthetic
+request trace (staggered arrivals, varied prompt/output lengths) served for
+both the dense and the COALA-compressed model, reporting per-request TTFT
+and aggregate requests/sec:
+
+  PYTHONPATH=src python -m repro.launch.serve --smoke --continuous
 """
 import argparse
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import CompressConfig
 from repro.configs import get_config, get_smoke_config
@@ -15,36 +25,79 @@ from repro.core.calibrate import calibrate_model
 from repro.core.compress import compress_model, compression_summary
 from repro.data import DataConfig, TokenPipeline
 from repro.models import build_model
-from repro.serve import ServeEngine
+from repro.serve import ContinuousEngine, ServeEngine
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm_135m")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--compress-ratio", type=float, default=0.0)
-    ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
+def synthetic_trace(n_requests: int, vocab_size: int, *, seed: int = 0,
+                    min_prompt: int = 4, max_prompt: int = 24,
+                    min_new: int = 4, max_new: int = 16,
+                    arrival_every: int = 2):
+    """Mixed-length request trace with staggered arrivals.
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size,
-                                    seq_len=args.prompt_len,
-                                    global_batch=args.requests), cfg)
+    Returns a list of (arrival_step, prompt (T,), max_new_tokens)."""
+    rng = np.random.RandomState(seed)
+    trace = []
+    for i in range(n_requests):
+        t0 = int(rng.randint(min_prompt, max_prompt + 1))
+        nn = int(rng.randint(min_new, max_new + 1))
+        prompt = rng.randint(0, vocab_size, (t0,)).astype(np.int32)
+        trace.append((i * arrival_every, prompt, nn))
+    return trace
 
+
+def serve_trace(engine: ContinuousEngine, trace, *, temperature: float = 0.0):
+    """Replay a trace: submissions are keyed to engine steps, so requests
+    join the running decode batch mid-flight."""
+    pending = list(trace)
+    step = 0
+    while pending or engine.has_work():
+        while pending and pending[0][0] <= step:
+            _, prompt, nn = pending.pop(0)
+            engine.submit(prompt, nn, temperature=temperature)
+        engine.step()
+        step += 1
+    return engine.metrics()
+
+
+def _compressed_params(cfg, model, params, pipe, ratio: float):
+    cal = calibrate_model(model, params, [pipe.get_batch(i) for i in range(2)])
+    cparams, reports = compress_model(
+        model, params, cal,
+        CompressConfig(method="coala", ratio=ratio, lam=4.0, mu=-1.0))
+    print("compression:", compression_summary(reports))
+    return cparams
+
+
+def run_continuous(args, cfg, model, params, pipe):
+    if args.requests <= 0:
+        print("no requests to serve")
+        return
+    ratio = args.compress_ratio if args.compress_ratio > 0 else 0.6
+    cparams = _compressed_params(cfg, model, params, pipe, ratio)
+    trace = synthetic_trace(args.requests, cfg.vocab_size, seed=args.seed,
+                            max_new=args.new_tokens)
+    for name, p in (("dense", params), ("coala", cparams)):
+        eng = ContinuousEngine(model, p, compute_dtype=jnp.float32,
+                               cache_dtype=jnp.float32,
+                               block_size=args.block_size,
+                               num_blocks=args.num_blocks,
+                               max_running=args.max_running)
+        m = serve_trace(eng, trace, temperature=args.temperature)
+        print(f"[{name}] per-request TTFT (s):")
+        for r in sorted(eng.finished, key=lambda r: r.req_id):
+            print(f"  req {r.req_id:3d}: prompt={len(r.prompt):3d} "
+                  f"new={len(r.out_tokens):3d} ttft={r.ttft:.3f}s"
+                  + (f" (preempted x{r.preemptions})" if r.preemptions else ""))
+        print(f"[{name}] aggregate: {m['requests']} requests, "
+              f"{m['requests_per_sec']:.2f} req/s, "
+              f"{m['tokens_per_sec']:.1f} new tok/s, "
+              f"mean TTFT {m['mean_ttft_s']:.3f}s")
+
+
+def run_fixed(args, cfg, model, params, pipe):
     if args.compress_ratio > 0:
-        cal = calibrate_model(model, params,
-                              [pipe.get_batch(i) for i in range(2)])
-        params, reports = compress_model(
-            model, params, cal,
-            CompressConfig(method="coala", ratio=args.compress_ratio,
-                           lam=4.0, mu=-1.0))
-        print("compression:", compression_summary(reports))
-
+        params = _compressed_params(cfg, model, params, pipe,
+                                    args.compress_ratio)
     eng = ServeEngine(model, params, compute_dtype=jnp.float32,
                       cache_dtype=jnp.float32)
     batch = pipe.get_batch(0)
@@ -53,6 +106,36 @@ def main():
                        extras=extras or None, temperature=args.temperature)
     print(f"served {args.requests} requests x {args.new_tokens} tokens")
     print(out[:, -args.new_tokens:])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_135m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over the paged KV cache")
+    ap.add_argument("--compress-ratio", type=float, default=0.0)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="paged-cache tokens per block")
+    ap.add_argument("--num-blocks", type=int, default=256)
+    ap.add_argument("--max-running", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                    seq_len=args.prompt_len,
+                                    global_batch=args.requests), cfg)
+    if args.continuous:
+        run_continuous(args, cfg, model, params, pipe)
+    else:
+        run_fixed(args, cfg, model, params, pipe)
 
 
 if __name__ == "__main__":

@@ -61,13 +61,43 @@ def cross_attn_init(key, cfg, dtype=jnp.float32):
 # ---------------------------------------------------------------------------
 
 def _mask_bias(iq, ik, *, causal: bool, window: int):
-    """(len_q, len_k) additive bias from global position indices."""
-    ok = jnp.ones((iq.shape[0], ik.shape[0]), bool)
+    """Additive bias from global position indices.
+
+    iq: (len_q,) shared positions, or (B, len_q) per-request positions (the
+    continuous-batching engine decodes requests at different offsets in one
+    step). Returns (len_q, len_k) resp. (B, len_q, len_k)."""
+    d = iq[..., None] - ik
+    ok = jnp.ones(d.shape, bool)
     if causal:
-        ok &= iq[:, None] >= ik[None, :]
+        ok &= d >= 0
     if window > 0:
-        ok &= (iq[:, None] - ik[None, :]) < window
+        ok &= d < window
     return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _q_positions(q_offset, tq):
+    """Global query positions; q_offset scalar or (B,) -> (tq,) or (B, tq)."""
+    off = jnp.asarray(q_offset)
+    if off.ndim == 1:
+        return off[:, None] + jnp.arange(tq)
+    return off + jnp.arange(tq)
+
+
+def _add_bias(s, bias):
+    """s: (b, hkv, g, tq, tk); bias (tq, tk) or (b, tq, tk)."""
+    if bias.ndim == 3:
+        return s + bias[:, None, None]
+    return s + bias
+
+
+def _row_update(cache_arr, update, pos):
+    """Write one token per batch row at per-row positions.
+
+    cache_arr: (B, L, ...); update: (B, 1, ...); pos: (B,) int32."""
+    start = (0,) * (cache_arr.ndim - 2)
+    return jax.vmap(
+        lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p,) + start)
+    )(cache_arr, update, pos)
 
 
 def _dense_sdpa(q, k, v, *, q_offset, causal, window, cap, scale):
@@ -77,9 +107,9 @@ def _dense_sdpa(q, k, v, *, q_offset, causal, window, cap, scale):
     qg = q.reshape(b, tq, hkv, g, hd)
     s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
     s = softcap(s, cap)
-    iq = q_offset + jnp.arange(tq)
+    iq = _q_positions(q_offset, tq)
     ik = jnp.arange(tk)
-    s = s + _mask_bias(iq, ik, causal=causal, window=window)
+    s = _add_bias(s, _mask_bias(iq, ik, causal=causal, window=window))
     p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
     o = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
     return o.reshape(b, tq, hq, hd)
@@ -125,7 +155,7 @@ def _chunked_sdpa_padded(q, k, v, *, q_offset, causal, window, cap, scale,
     vc = v.reshape(b, nk, ck, hkv, hd)
 
     def one_q_chunk(qi, q_blk):
-        iq = q_offset + qi * cq + jnp.arange(cq)
+        iq = _q_positions(q_offset, cq) + qi * cq
         m0 = jnp.full((b, hkv, g, cq), NEG_INF, jnp.float32)
         l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
         a0 = jnp.zeros((b, hkv, g, cq, hd), jnp.float32)
@@ -137,7 +167,7 @@ def _chunked_sdpa_padded(q, k, v, *, q_offset, causal, window, cap, scale,
             s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, k_blk)
             s = s.astype(jnp.float32) * scale
             s = softcap(s, cap)
-            s = s + _mask_bias(iq, ik, causal=causal, window=window)
+            s = _add_bias(s, _mask_bias(iq, ik, causal=causal, window=window))
             s = jnp.where((ik < kv_valid)[None, None, None, None, :],
                           s, NEG_INF)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
@@ -168,7 +198,8 @@ def sdpa(q, k, v, *, ctx: ParallelCtx, q_offset=0, causal=True, window=0,
     if scale is None:
         scale = 1.0 / (q.shape[-1] ** 0.5)
     long_seq = max(q.shape[1], k.shape[1]) > ctx.dense_attn_max_seq
-    if ctx.use_pallas and causal and q.shape[1] == k.shape[1] and window == 0:
+    if (ctx.use_pallas and causal and q.shape[1] == k.shape[1]
+            and window == 0 and jnp.ndim(q_offset) == 0):
         from repro.kernels import ops as kops
         return kops.flash_attention(q, k, v, scale=scale, cap=cap)
     if long_seq:
@@ -213,10 +244,14 @@ def gqa_apply(cfg, params, x, *, ctx: ParallelCtx, cos_sin=None,
             o = sdpa(q, k, v, ctx=ctx, q_offset=0, causal=causal,
                      window=window, cap=cfg.attn_logit_softcap, scale=scale)
         else:                                             # decode: one token
-            kf = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
-            vf = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+            if jnp.ndim(pos):                             # per-request positions
+                kf = _row_update(cache["k"], k.astype(cache["k"].dtype), pos)
+                vf = _row_update(cache["v"], v.astype(cache["v"].dtype), pos)
+            else:
+                kf = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+                vf = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
             new_cache = {"k": kf, "v": vf}
             o = sdpa(q, kf.astype(q.dtype), vf.astype(q.dtype), ctx=ctx,
                      q_offset=pos, causal=causal, window=window,
@@ -257,18 +292,25 @@ def mla_apply(cfg, params, x, *, ctx: ParallelCtx, cos_sin=None,
 
     if cache is not None and pos is not None:
         # absorbed decode: score in latent space, never materialize per-head K/V
-        cf = jax.lax.dynamic_update_slice(
-            cache["c"], c.astype(cache["c"].dtype), (0, pos, 0))
-        rf = jax.lax.dynamic_update_slice(
-            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, pos, 0))
+        if jnp.ndim(pos):                                  # per-request positions
+            cf = _row_update(cache["c"], c.astype(cache["c"].dtype), pos)
+            rf = _row_update(cache["k_rope"],
+                             k_rope.astype(cache["k_rope"].dtype), pos)
+        else:
+            cf = jax.lax.dynamic_update_slice(
+                cache["c"], c.astype(cache["c"].dtype), (0, pos, 0))
+            rf = jax.lax.dynamic_update_slice(
+                cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+                (0, pos, 0))
         new_cache = {"c": cf, "k_rope": rf}
         q_c = jnp.einsum("bthd,khd->bthk", q_nope, w_uk)       # (b,1,h,kl)
         s = (jnp.einsum("bthk,bsk->bhts", q_c, cf.astype(x.dtype)) +
              jnp.einsum("bthd,bsd->bhts", q_rope, rf.astype(x.dtype)))
         s = s.astype(jnp.float32) * scale
-        iq = pos + jnp.arange(t)
+        iq = _q_positions(pos, t)
         ik = jnp.arange(cf.shape[1])
-        s = s + _mask_bias(iq, ik, causal=True, window=0)[None, None]
+        bias = _mask_bias(iq, ik, causal=True, window=0)
+        s = s + (bias[:, None] if bias.ndim == 3 else bias[None, None])
         p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
         ctx_c = jnp.einsum("bhts,bsk->bthk", p, cf.astype(x.dtype))
         o = jnp.einsum("bthk,khd->bthd", ctx_c, w_uv)          # (b,t,h,dv)

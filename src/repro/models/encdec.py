@@ -143,6 +143,10 @@ class EncDecLM:
     def _embed_dec(self, params, tokens, pos0):
         cfg = self.cfg
         t = tokens.shape[1]
+        if jnp.ndim(pos0):                  # per-request positions: (B,)
+            pe = jax.vmap(lambda p: jax.lax.dynamic_slice_in_dim(
+                params["pos_dec"], p, t, axis=0))(pos0)
+            return params["embed"][tokens] + pe
         pe = jax.lax.dynamic_slice_in_dim(params["pos_dec"], pos0, t, axis=0)
         return params["embed"][tokens] + pe[None]
 

@@ -267,12 +267,13 @@ class LM:
         cfg = self.cfg
         if cfg.family == "encdec":
             return None
+        off = jnp.asarray(offset)
+        # offset (B,) -> per-request positions (B, t); scalar -> shared (t,)
+        pos = (off[:, None] if off.ndim else off) + jnp.arange(t)
         if cfg.mrope_sections != (0, 0, 0):
-            pos = offset + jnp.arange(t)
             pids = jnp.broadcast_to(pos, (3, batch, t))
             return mrope_cos_sin(pids, cfg.head_dim, cfg.rope_theta,
                                  cfg.mrope_sections)
-        pos = offset + jnp.arange(t)
         hd = cfg.qk_rope_dim if cfg.kv_lora_rank else cfg.head_dim
         return rope_cos_sin(pos, hd, cfg.rope_theta)
 
@@ -406,7 +407,8 @@ class LM:
 
     def decode_step(self, params, tokens, cache, pos, *,
                     ctx: ParallelCtx = CPU_CTX, compute_dtype=jnp.bfloat16):
-        """tokens: (B, 1) int32; pos: scalar int32 — position being written."""
+        """tokens: (B, 1) int32; pos: scalar int32 or (B,) int32 vector of
+        per-request positions being written (continuous batching)."""
         x = self._embed(params, tokens).astype(compute_dtype)
         h, _, cache = self._backbone(params, x, ctx=ctx, cache=cache, pos=pos)
         return self._logits(params, h)[:, 0], cache

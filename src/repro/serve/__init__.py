@@ -1,1 +1,3 @@
-from repro.serve.engine import ServeEngine  # noqa: F401
+from repro.serve.engine import ContinuousEngine, ServeEngine  # noqa: F401
+from repro.serve.paged_cache import BlockPool, CacheLayout  # noqa: F401
+from repro.serve.scheduler import Request, Scheduler  # noqa: F401

@@ -1,19 +1,42 @@
-"""Batched serving engine: jitted prefill + decode with KV-cache reuse.
+"""Serving engines.
 
-Greedy or temperature sampling; fixed-batch continuous loop (the multi-pod
-serving dry-run lowers exactly these step functions). Works for decoder-only,
-enc-dec (whisper: frames in, cross-cache built at prefill) and vlm (vision
-prefix at prefill).
+``ServeEngine`` — the original fixed-batch loop: one synchronized batch, a
+dense monolithic KV cache, everything decodes in lockstep. Kept as the
+fallback/oracle path.
+
+``ContinuousEngine`` — request-level continuous batching over a paged KV
+cache. ``submit()`` enqueues a request; each ``step()`` admits whatever fits
+(scheduler + block pool), prefills joiners one at a time into pool blocks,
+then runs ONE decode step over the whole running set at per-request
+positions (the models' vector-``pos`` decode path), so requests of different
+lengths interleave freely and finished requests free their blocks
+immediately. Per-request sampling params (greedy + temperature) are applied
+row-wise; sampling keys are folded per (seed, output index) so a preempted
+request resumes on the same trajectory.
+
+The batch each step is assembled by gathering block tables into exactly the
+contiguous pytree ``init_cache`` would have produced, so the existing jitted
+``prefill``/``decode_step`` functions run unchanged — under greedy decoding
+the continuous engine is token-identical to ``ServeEngine``
+(tests/test_serve_continuous.py asserts this).
+
+XLA recompiles when the (batch, blocks-per-request) envelope grows; on TPU
+you would pad both to fixed buckets — on the CPU smoke path we keep shapes
+honest and eat the compile.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+import time
+from typing import Dict, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.common import CPU_CTX, ParallelCtx
+from repro.serve.paged_cache import BlockPool
+from repro.serve.scheduler import Request, Scheduler
 
 
 @dataclasses.dataclass
@@ -38,9 +61,16 @@ class ServeEngine:
                  seed: int = 0, max_len: Optional[int] = None):
         """prompt_tokens: (B, T_prompt) int32 -> (B, T_prompt+new) int32."""
         b, t0 = prompt_tokens.shape
-        total = max_len or (t0 + max_new_tokens)
-        cache = self.model.init_cache(b, total, dtype=self.cache_dtype)
         kw = dict(extras or {})
+        # vlm: the vision prefix occupies the first cache positions, so the
+        # cache and the decode write positions are offset by its length
+        vis = 0
+        cfg = getattr(self.model, "cfg", None)
+        if ("vision_embeds" in kw and cfg is not None
+                and getattr(cfg, "family", "") == "vlm"):
+            vis = kw["vision_embeds"].shape[1]
+        total = max_len or (vis + t0 + max_new_tokens)
+        cache = self.model.init_cache(b, total, dtype=self.cache_dtype)
         logits, cache = self._prefill(self.params, prompt_tokens, cache, **kw)
         logits = logits[:, -1] if logits.ndim == 3 else logits
         out = [prompt_tokens]
@@ -50,7 +80,7 @@ class ServeEngine:
             out.append(tok)
             if i == max_new_tokens - 1:
                 break
-            pos = jnp.asarray(t0 + i, jnp.int32)
+            pos = jnp.asarray(vis + t0 + i, jnp.int32)
             logits, cache = self._decode(self.params, tok, cache, pos)
             key, sk = jax.random.split(key)
             tok = self._sample(logits, temperature, sk)
@@ -62,3 +92,200 @@ class ServeEngine:
             return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         return jax.random.categorical(key, logits / temperature)[:, None] \
             .astype(jnp.int32)
+
+
+def _sample_rows(logits, temps, keys):
+    """Row-wise sampling: greedy where temp <= 0, categorical otherwise."""
+    def one(lg, temp, key):
+        greedy = jnp.argmax(lg, axis=-1)
+        samp = jax.random.categorical(key, lg / jnp.maximum(temp, 1e-6))
+        return jnp.where(temp > 0.0, samp, greedy).astype(jnp.int32)
+    return jax.vmap(one)(logits, temps, keys)
+
+
+class ContinuousEngine:
+    """Request-level serving: ``submit()`` / ``step()`` / ``stream()``."""
+
+    def __init__(self, model, params, *, ctx: ParallelCtx = CPU_CTX,
+                 compute_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
+                 block_size: int = 16, num_blocks: int = 512,
+                 max_running: int = 8):
+        self.model = model
+        self.params = params
+        self.ctx = ctx
+        self.compute_dtype = compute_dtype
+        self.cache_dtype = cache_dtype
+        self.block_size = block_size
+        self.pool = BlockPool(model, num_blocks=num_blocks,
+                              block_size=block_size,
+                              max_requests=max_running, dtype=cache_dtype)
+        self.scheduler = Scheduler(self.pool, max_running=max_running)
+        self.finished: List[Request] = []
+        self._next_id = 0
+        self._start_time: Optional[float] = None
+        m, cd = model, compute_dtype
+        self._prefill = jax.jit(
+            lambda p, tk, c, **kw: m.prefill(p, tk, c, ctx=ctx,
+                                             compute_dtype=cd, **kw))
+        self._decode = jax.jit(
+            lambda p, tk, c, pos: m.decode_step(p, tk, c, pos, ctx=ctx,
+                                                compute_dtype=cd))
+        self._sample = jax.jit(_sample_rows)
+
+    # ------------------------------------------------------------------ API
+    def submit(self, prompt_tokens, max_new_tokens: int, *,
+               temperature: float = 0.0, seed: int = 0,
+               eos_id: Optional[int] = None,
+               extras: Optional[Dict] = None) -> int:
+        """Enqueue one request; returns its id. ``prompt_tokens``: (T0,) ints;
+        ``extras``: per-request model inputs shaped (1, ...) — whisper frames,
+        vlm vision_embeds."""
+        prompt = np.asarray(prompt_tokens, np.int32).reshape(-1)
+        vis = 0
+        cfg = getattr(self.model, "cfg", None)
+        if (extras and "vision_embeds" in extras and cfg is not None
+                and getattr(cfg, "family", "") == "vlm"):
+            vis = extras["vision_embeds"].shape[1]
+        req = Request(req_id=self._next_id, prompt=prompt,
+                      max_new_tokens=max_new_tokens, temperature=temperature,
+                      seed=seed, eos_id=eos_id, extras=extras, vis_offset=vis)
+        need = self.pool.blocks_for(req.cache_budget())
+        if need > self.pool.usable_blocks:
+            raise ValueError(
+                f"request needs {need} blocks ({req.cache_budget()} cache "
+                f"positions) but the pool only has {self.pool.usable_blocks} "
+                f"({self.pool.num_blocks} x {self.block_size}-token blocks, "
+                "one reserved); raise --num-blocks/--block-size")
+        self._next_id += 1
+        if self._start_time is None:
+            self._start_time = req.arrival_time
+        self.scheduler.submit(req)
+        return req.req_id
+
+    def has_work(self) -> bool:
+        return self.scheduler.has_work()
+
+    def step(self) -> List[Request]:
+        """Admit + prefill joiners, run one decode step over the running
+        batch; returns the requests that finished during this step."""
+        done: List[Request] = []
+        for req in self.scheduler.admit():
+            self._prefill_request(req)
+            if req.done:
+                self.scheduler.evict(req)
+                self.finished.append(req)
+                done.append(req)
+        running = list(self.scheduler.running)
+        if running:
+            done.extend(self._decode_step(running))
+        return done
+
+    def stream(self) -> Iterator[Request]:
+        """Drive steps until the queue drains, yielding finished requests."""
+        while self.has_work():
+            yield from self.step()
+
+    def run(self) -> List[Request]:
+        return list(self.stream())
+
+    def generate(self, prompt_tokens, max_new_tokens: int, *,
+                 extras: Optional[Dict] = None, temperature: float = 0.0,
+                 seed: int = 0, **_) -> jnp.ndarray:
+        """Fixed-batch convenience wrapper matching ``ServeEngine.generate``:
+        submits every row, runs to completion, reassembles (B, T0+new)."""
+        b, t0 = prompt_tokens.shape
+        prompts = np.asarray(prompt_tokens, np.int32)
+        ids = []
+        for i in range(b):
+            ex = None
+            if extras:
+                ex = {k: v[i:i + 1] for k, v in extras.items()}
+            ids.append(self.submit(prompts[i], max_new_tokens,
+                                   temperature=temperature, seed=seed + i,
+                                   extras=ex))
+        by_id = {r.req_id: r for r in self.run() if r.req_id in set(ids)}
+        rows = []
+        for i, rid in enumerate(ids):
+            out = np.asarray(by_id[rid].out_tokens, np.int32)
+            out = np.pad(out, (0, max_new_tokens - len(out)))   # early EOS
+            rows.append(np.concatenate([prompts[i], out]))
+        return jnp.asarray(np.stack(rows), jnp.int32)
+
+    def metrics(self) -> Dict[str, float]:
+        """Aggregate serving metrics over finished requests."""
+        fin = self.finished
+        if not fin:
+            return {"requests": 0, "requests_per_sec": 0.0, "new_tokens": 0,
+                    "tokens_per_sec": 0.0, "mean_ttft_s": float("nan"),
+                    "max_ttft_s": float("nan"), "preemptions": 0}
+        ttfts = [r.ttft for r in fin if r.ttft is not None]
+        new_tokens = sum(len(r.out_tokens) for r in fin)
+        elapsed = max(max(r.finish_time for r in fin) - self._start_time,
+                      1e-9)
+        return {
+            "requests": len(fin),
+            "requests_per_sec": len(fin) / elapsed,
+            "new_tokens": new_tokens,
+            "tokens_per_sec": new_tokens / elapsed,
+            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else float("nan"),
+            "max_ttft_s": float(np.max(ttfts)) if ttfts else float("nan"),
+            "preemptions": sum(r.preemptions for r in fin),
+        }
+
+    # ------------------------------------------------------------ internals
+    def _sample_tokens(self, logits, reqs) -> np.ndarray:
+        temps = jnp.asarray([r.temperature for r in reqs], jnp.float32)
+        keys = jnp.stack([
+            jax.random.fold_in(jax.random.PRNGKey(r.seed), len(r.out_tokens))
+            for r in reqs])
+        return np.asarray(self._sample(logits, temps, keys))
+
+    def _prefill_request(self, req: Request) -> None:
+        tokens = req.prefill_tokens()
+        l0 = req.vis_offset + len(tokens)
+        self.pool.alloc(req.req_id, l0)
+        nb = len(self.pool.table(req.req_id))
+        cache = self.model.init_cache(1, nb * self.block_size,
+                                      dtype=self.cache_dtype)
+        kw = dict(req.extras or {})
+        logits, cache = self._prefill(self.params, jnp.asarray(tokens)[None],
+                                      cache, **kw)
+        logits = logits[:, -1] if logits.ndim == 3 else logits
+        self.pool.scatter_prefill([req.req_id], cache, l0)
+        req.cache_len = l0
+        tok = int(self._sample_tokens(logits, [req])[0])
+        req.out_tokens.append(tok)
+        if req.first_token_time is None:
+            req.first_token_time = time.perf_counter()
+
+    def _decode_step(self, running: List[Request]) -> List[Request]:
+        # reserve the next position for everyone, preempting the youngest
+        # request when the pool runs dry
+        while True:
+            try:
+                for r in running:
+                    self.pool.extend(r.req_id, r.cache_len + 1)
+                break
+            except MemoryError:
+                victim = self.scheduler.preempt_youngest()
+                running = [r for r in running if r is not victim]
+                if not running:
+                    raise MemoryError(
+                        "block pool too small for a single request")
+        ids = [r.req_id for r in running]
+        cache = self.pool.gather_batch(ids)
+        tok = jnp.asarray([[r.out_tokens[-1]] for r in running], jnp.int32)
+        pos = jnp.asarray([r.cache_len for r in running], jnp.int32)
+        logits, cache = self._decode(self.params, tok, cache, pos)
+        self.pool.scatter_token(ids, cache, pos)
+        for r in running:
+            r.cache_len += 1
+        nxt = self._sample_tokens(logits, running)
+        done = []
+        for r, t in zip(running, nxt):
+            r.out_tokens.append(int(t))
+            if r.done:
+                self.scheduler.evict(r)
+                self.finished.append(r)
+                done.append(r)
+        return done

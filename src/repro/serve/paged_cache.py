@@ -1,0 +1,300 @@
+"""Paged KV-cache block pool for continuous batching.
+
+The pool owns all KV storage as fixed-size *token blocks* plus a per-request
+*state* store, and hands the engine contiguous padded views on demand:
+
+  * token-axis cache leaves (attention K/V, MLA latents) are stored as
+    ``(num_blocks, block_size, *tail)`` and addressed through per-request
+    block tables (free-list allocator, alloc/extend/free at block
+    granularity) — no request ever reserves ``max_len`` slots up front;
+  * per-request state leaves (mamba/xLSTM recurrent state, whisper cross
+    K/V — anything whose shape does not scale with ``max_len``) live in a
+    ``(max_requests, *tail)`` slot store.
+
+Which leaf is which is *probed*, not hard-coded: ``CacheLayout`` calls the
+model's ``init_cache`` hook at two lengths and two batch sizes and diffs leaf
+shapes, so the same pool works for decoder-only, enc-dec and VLM layouts
+without per-model plumbing.
+
+The read path is gather-based: ``gather_batch`` indexes the pool with a
+padded ``(B, nb)`` block-table matrix to assemble exactly the pytree
+``init_cache`` would have produced for a contiguous batch, which feeds the
+existing jitted ``prefill``/``decode_step`` unchanged. ``scatter_token``
+writes back only the block each request just decoded into (O(block_size)
+per step, not O(T)). Block 0 is a reserved trash block: table padding points
+at it, so ragged batches scatter garbage nowhere that matters, and the
+causal mask (per-request positions) hides whatever is gathered from it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    batch_axis: int            # axis indexed by request
+    token_axis: Optional[int]  # axis that scales with max_len; None => state
+    tail: Tuple[int, ...]      # shape with batch (and token) axes removed
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheLayout:
+    """Probed structure of a model's cache pytree."""
+    treedef: Any
+    specs: Tuple[LeafSpec, ...]
+    dtypes: Tuple[Any, ...]
+
+    @staticmethod
+    def probe(model, dtype=jnp.bfloat16, probe_len: int = 8) -> "CacheLayout":
+        """Diff ``init_cache`` shapes across (batch, len) to classify leaves."""
+        shapes = lambda c: [x.shape for x in jax.tree.leaves(c)]
+        c11 = model.init_cache(1, probe_len, dtype=dtype)
+        s11 = shapes(c11)
+        s21 = shapes(model.init_cache(2, probe_len, dtype=dtype))
+        s12 = shapes(model.init_cache(1, 2 * probe_len, dtype=dtype))
+        specs = []
+        for a, b, c in zip(s11, s21, s12):
+            b_ax = [i for i, (x, y) in enumerate(zip(a, b)) if x != y]
+            t_ax = [i for i, (x, y) in enumerate(zip(a, c)) if x != y]
+            assert len(b_ax) == 1, f"ambiguous batch axis: {a} vs {b}"
+            assert len(t_ax) <= 1, f"ambiguous token axis: {a} vs {c}"
+            token_axis = t_ax[0] if t_ax else None
+            drop = {b_ax[0]} | ({token_axis} if token_axis is not None else set())
+            tail = tuple(s for i, s in enumerate(a) if i not in drop)
+            specs.append(LeafSpec(b_ax[0], token_axis, tail))
+        return CacheLayout(jax.tree.structure(c11), tuple(specs),
+                           tuple(x.dtype for x in jax.tree.leaves(c11)))
+
+
+def _to_pool_order(leaf, spec: LeafSpec):
+    """(… batch … token …) -> (batch, token, *tail) for token leaves,
+    (batch, *tail) for state leaves."""
+    if spec.token_axis is None:
+        return jnp.moveaxis(leaf, spec.batch_axis, 0)
+    return jnp.moveaxis(leaf, (spec.batch_axis, spec.token_axis), (0, 1))
+
+
+def _from_pool_order(arr, spec: LeafSpec):
+    if spec.token_axis is None:
+        return jnp.moveaxis(arr, 0, spec.batch_axis)
+    return jnp.moveaxis(arr, (0, 1), (spec.batch_axis, spec.token_axis))
+
+
+class BlockPool:
+    """Free-list block allocator + pooled storage for one model's cache.
+
+    Block 0 is reserved (trash). ``alloc``/``extend``/``free`` manage the
+    python-side accounting; the array ops (``gather_batch``, ``scatter_*``)
+    are jitted and shape-stable in (B, nb).
+    """
+
+    def __init__(self, model, *, num_blocks: int, block_size: int,
+                 max_requests: int, dtype=jnp.bfloat16):
+        assert num_blocks >= 2 and block_size >= 1
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.max_requests = max_requests
+        self.layout = CacheLayout.probe(model, dtype=dtype,
+                                        probe_len=max(8, block_size))
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))  # 0 = trash
+        self._tables: Dict[int, List[int]] = {}
+        self._slots: Dict[int, int] = {}
+        self._free_slots: List[int] = list(range(max_requests - 1, -1, -1))
+        # pooled token storage + per-request state store
+        self.token_store = [
+            jnp.zeros((num_blocks, block_size) + sp.tail, dt)
+            for sp, dt in zip(self.layout.specs, self.layout.dtypes)
+            if sp.token_axis is not None]
+        self.state_store = [
+            jnp.zeros((max_requests,) + sp.tail, dt)
+            for sp, dt in zip(self.layout.specs, self.layout.dtypes)
+            if sp.token_axis is None]
+
+    # ------------------------------------------------------------ accounting
+    @property
+    def usable_blocks(self) -> int:
+        return self.num_blocks - 1             # block 0 reserved as trash
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free_slots)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 1) // self.block_size)
+
+    def can_alloc(self, n_tokens: int) -> bool:
+        return (self.blocks_for(n_tokens) <= len(self._free)
+                and len(self._free_slots) > 0)
+
+    def alloc(self, req_id: int, n_tokens: int) -> None:
+        """Reserve blocks covering ``n_tokens`` and a state slot."""
+        assert req_id not in self._tables, f"request {req_id} already allocated"
+        need = self.blocks_for(n_tokens)
+        if need > len(self._free) or not self._free_slots:
+            raise MemoryError(
+                f"pool exhausted: need {need} blocks / 1 slot, have "
+                f"{len(self._free)} blocks / {len(self._free_slots)} slots")
+        blks = [self._free.pop() for _ in range(need)]
+        self._zero(blks)
+        self._tables[req_id] = blks
+        self._slots[req_id] = self._free_slots.pop()
+
+    def extend(self, req_id: int, n_tokens: int) -> None:
+        """Grow the request's table to cover ``n_tokens`` total tokens."""
+        table = self._tables[req_id]
+        need = self.blocks_for(n_tokens) - len(table)
+        if need > len(self._free):
+            raise MemoryError(f"pool exhausted extending request {req_id}")
+        if need > 0:
+            blks = [self._free.pop() for _ in range(need)]
+            self._zero(blks)
+            table.extend(blks)
+
+    def _zero(self, blks: List[int]) -> None:
+        # reused blocks must read as zeros, not stale KV from a freed request
+        if blks and self.token_store:
+            self.token_store = _zero_blocks(self.token_store,
+                                            jnp.asarray(blks, jnp.int32))
+
+    def free(self, req_id: int) -> None:
+        self._free.extend(self._tables.pop(req_id))
+        self._free_slots.append(self._slots.pop(req_id))
+
+    def table(self, req_id: int) -> List[int]:
+        return list(self._tables[req_id])
+
+    def slot(self, req_id: int) -> int:
+        return self._slots[req_id]
+
+    def padded_tables(self, req_ids) -> jnp.ndarray:
+        """(B, nb) int32 block tables, ragged rows padded with the trash
+        block; nb is the max table length over the batch."""
+        nb = max(len(self._tables[r]) for r in req_ids)
+        rows = [self._tables[r] + [0] * (nb - len(self._tables[r]))
+                for r in req_ids]
+        return jnp.asarray(rows, jnp.int32)
+
+    def slots(self, req_ids) -> jnp.ndarray:
+        return jnp.asarray([self._slots[r] for r in req_ids], jnp.int32)
+
+    # ------------------------------------------------------------- array ops
+    def gather_batch(self, req_ids):
+        """Assemble the contiguous batched cache pytree for ``req_ids``.
+
+        Returns a pytree identical in structure to
+        ``model.init_cache(B, nb * block_size)`` — directly consumable by the
+        jitted prefill/decode functions.
+        """
+        tables = self.padded_tables(req_ids)
+        slots = self.slots(req_ids)
+        leaves = _gather(tuple(self.layout.specs), self.block_size,
+                         self.token_store, self.state_store, tables, slots)
+        return jax.tree.unflatten(self.layout.treedef, leaves)
+
+    def scatter_prefill(self, req_ids, cache, n_tokens: int) -> None:
+        """Write the first ``n_tokens`` positions of a freshly prefilled
+        contiguous cache (plus all state leaves) back into the pool."""
+        tables = self.padded_tables(req_ids)
+        nb_used = self.blocks_for(n_tokens)
+        self.token_store, new_state = _scatter_prefill(
+            tuple(self.layout.specs), self.block_size, nb_used,
+            self.token_store, self.state_store,
+            tuple(jax.tree.leaves(cache)), tables, self.slots(req_ids))
+        self.state_store = new_state
+
+    def scatter_token(self, req_ids, cache, positions) -> None:
+        """Write back the single block each request decoded into (the block
+        containing ``positions[i]``) plus updated state leaves."""
+        tables = self.padded_tables(req_ids)
+        self.token_store, self.state_store = _scatter_token(
+            tuple(self.layout.specs), self.block_size,
+            self.token_store, self.state_store,
+            tuple(jax.tree.leaves(cache)), tables, self.slots(req_ids),
+            jnp.asarray(positions, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# jitted pool <-> contiguous-batch converters
+#
+# The store arguments of the in-place update ops are donated so XLA reuses
+# the pool buffers instead of copying the whole pool every step; the pool
+# immediately replaces its references with the returned arrays.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _zero_blocks(token_store, ids):
+    return [s.at[ids].set(0) for s in token_store]
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _gather(specs, block_size, token_store, state_store, tables, slots):
+    """tables: (B, nb); slots: (B,). Returns leaves in treedef order."""
+    b, nb = tables.shape
+    out, ti, si = [], 0, 0
+    for sp in specs:
+        if sp.token_axis is None:
+            arr = state_store[si][slots]                     # (B, *tail)
+            si += 1
+        else:
+            g = token_store[ti][tables]                      # (B, nb, bs, *tail)
+            arr = g.reshape((b, nb * block_size) + g.shape[3:])
+            ti += 1
+        out.append(_from_pool_order(arr, sp))
+    return out
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2), donate_argnums=(3, 4))
+def _scatter_prefill(specs, block_size, nb_used, token_store, state_store,
+                     cache_leaves, tables, slots):
+    b = tables.shape[0]
+    new_token, new_state = list(token_store), list(state_store)
+    ti, si = 0, 0
+    for sp, leaf in zip(specs, cache_leaves):
+        arr = _to_pool_order(leaf, sp)                       # (B, T, *tail)
+        if sp.token_axis is None:
+            new_state[si] = new_state[si].at[slots].set(
+                arr.astype(new_state[si].dtype))
+            si += 1
+            continue
+        t_used = nb_used * block_size
+        blk = arr[:, :t_used].reshape(
+            (b, nb_used, block_size) + arr.shape[2:])
+        ids = tables[:, :nb_used]                            # (B, nb_used)
+        new_token[ti] = new_token[ti].at[ids].set(
+            blk.astype(new_token[ti].dtype))
+        ti += 1
+    return new_token, new_state
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(2, 3))
+def _scatter_token(specs, block_size, token_store, state_store,
+                   cache_leaves, tables, slots, positions):
+    """Write back only the block containing ``positions[i]`` per request."""
+    blk_idx = positions // block_size                        # (B,)
+    blk_ids = jnp.take_along_axis(tables, blk_idx[:, None], axis=1)[:, 0]
+    new_token, new_state = list(token_store), list(state_store)
+    ti, si = 0, 0
+    for sp, leaf in zip(specs, cache_leaves):
+        arr = _to_pool_order(leaf, sp)                       # (B, T, *tail)
+        if sp.token_axis is None:
+            new_state[si] = new_state[si].at[slots].set(
+                arr.astype(new_state[si].dtype))
+            si += 1
+            continue
+        slab = jax.vmap(
+            lambda a, i: jax.lax.dynamic_slice_in_dim(
+                a, i * block_size, block_size, axis=0)
+        )(arr, blk_idx)                                      # (B, bs, *tail)
+        new_token[ti] = new_token[ti].at[blk_ids].set(
+            slab.astype(new_token[ti].dtype))
+        ti += 1
+    return new_token, new_state

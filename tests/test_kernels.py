@@ -12,6 +12,7 @@ def _rand(shape, key, dtype=jnp.float32):
 
 
 class TestLowrankLinear:
+    @pytest.mark.slow
     @pytest.mark.parametrize("m,d_in,r,d_out", [
         (256, 512, 128, 512), (512, 256, 128, 1024),
         (256, 128, 128, 128), (300, 200, 64, 150),   # fallback path (non-divisible)
@@ -39,6 +40,7 @@ class TestLowrankLinear:
 
 
 class TestGramAccum:
+    @pytest.mark.slow
     @pytest.mark.parametrize("k,n", [(1024, 256), (512, 512), (100, 96)])
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     def test_matches_ref(self, k, n, dtype):
@@ -58,6 +60,7 @@ class TestGramAccum:
 
 
 class TestFlashAttention:
+    @pytest.mark.slow
     @pytest.mark.parametrize("b,t,hq,hkv,hd", [
         (1, 256, 4, 4, 64),            # MHA
         (2, 256, 8, 2, 64),            # GQA 4:1
@@ -99,6 +102,7 @@ class TestFlashAttention:
 
 
 class TestModelPallasPath:
+    @pytest.mark.slow
     def test_model_forward_with_pallas_attention(self):
         """A whole-model forward through the Pallas flash kernel (interpret
         mode) matches the portable attention path."""
