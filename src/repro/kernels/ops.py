@@ -11,6 +11,7 @@ import jax
 from repro.kernels import flash_attention as _fa
 from repro.kernels import gram_accum as _ga
 from repro.kernels import lowrank_linear as _ll
+from repro.kernels import paged_attention as _pa
 from repro.kernels.compat import tpu_compiler_params  # noqa: F401  (re-export)
 
 
@@ -31,3 +32,22 @@ def gram_accum(a, **kw):
 def flash_attention(q, k, v, **kw):
     kw.setdefault("interpret", _interpret())
     return _fa.flash_attention(q, k, v, **kw)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    impl=None, **kw):
+    """Paged-attention decode dispatch.
+
+    impl: None/"auto" — native Pallas on TPU, ``jax.nn`` reference
+    elsewhere (interpret mode is far too slow for a per-step hot path);
+    "pallas" — force the kernel (native on TPU, interpret elsewhere, used
+    by CI parity tests); "ref" — force the jax.nn fallback.
+    """
+    if impl in (None, "auto"):
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return _pa.paged_attention_ref(q, k_pages, v_pages, block_tables,
+                                       lengths, **kw)
+    assert impl == "pallas", f"unknown paged-attention impl: {impl}"
+    return _pa.paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                               interpret=_interpret(), **kw)

@@ -68,6 +68,11 @@ def _compressed_params(cfg, model, params, pipe, ratio: float):
     return cparams
 
 
+def _parse_buckets(spec: str):
+    """'1,2,4,8' -> (1, 2, 4, 8); empty -> None (engine default)."""
+    return tuple(int(s) for s in spec.split(",") if s.strip()) or None
+
+
 def run_continuous(args, cfg, model, params, pipe):
     if args.requests <= 0:
         print("no requests to serve")
@@ -76,22 +81,29 @@ def run_continuous(args, cfg, model, params, pipe):
     cparams = _compressed_params(cfg, model, params, pipe, ratio)
     trace = synthetic_trace(args.requests, cfg.vocab_size, seed=args.seed,
                             max_new=args.new_tokens)
+    paged = {"auto": None, "on": True, "off": False}[args.paged_kernel]
     for name, p in (("dense", params), ("coala", cparams)):
         eng = ContinuousEngine(model, p, compute_dtype=jnp.float32,
                                cache_dtype=jnp.float32,
                                block_size=args.block_size,
                                num_blocks=args.num_blocks,
-                               max_running=args.max_running)
+                               max_running=args.max_running,
+                               paged_kernel=paged,
+                               bucket_sizes=_parse_buckets(args.bucket_sizes))
         m = serve_trace(eng, trace, temperature=args.temperature)
+        path = "paged-kernel" if eng.paged_kernel else "gather"
         print(f"[{name}] per-request TTFT (s):")
         for r in sorted(eng.finished, key=lambda r: r.req_id):
             print(f"  req {r.req_id:3d}: prompt={len(r.prompt):3d} "
                   f"new={len(r.out_tokens):3d} ttft={r.ttft:.3f}s"
                   + (f" (preempted x{r.preemptions})" if r.preemptions else ""))
-        print(f"[{name}] aggregate: {m['requests']} requests, "
+        print(f"[{name}] aggregate ({path}): {m['requests']} requests, "
               f"{m['requests_per_sec']:.2f} req/s, "
-              f"{m['tokens_per_sec']:.1f} new tok/s, "
-              f"mean TTFT {m['mean_ttft_s']:.3f}s")
+              f"{m['tokens_per_sec']:.1f} new tok/s "
+              f"({m['decode_tok_per_s']:.1f} decode tok/s steady-state), "
+              f"mean TTFT {m['mean_ttft_s']:.3f}s, "
+              f"{m['decode_compiles']} decode compiles over "
+              f"{m['decode_steps']} steps ({m['decode_shapes']} shape buckets)")
 
 
 def run_fixed(args, cfg, model, params, pipe):
@@ -123,6 +135,15 @@ def main():
                     help="paged-cache tokens per block")
     ap.add_argument("--num-blocks", type=int, default=256)
     ap.add_argument("--max-running", type=int, default=8)
+    ap.add_argument("--paged-kernel", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="decode read path: paged-attention kernel vs "
+                         "gather-into-contiguous (auto: paged where the "
+                         "model supports it)")
+    ap.add_argument("--bucket-sizes", default="",
+                    help="comma-separated decode batch buckets, e.g. "
+                         "'1,2,4,8' (default: powers of two up to "
+                         "--max-running)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

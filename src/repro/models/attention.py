@@ -222,7 +222,8 @@ def gqa_empty_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
 
 def gqa_apply(cfg, params, x, *, ctx: ParallelCtx, cos_sin=None,
               cache=None, pos=None, local: bool = False,
-              causal: bool = True) -> Tuple[jax.Array, Optional[dict]]:
+              causal: bool = True,
+              paged_tables=None) -> Tuple[jax.Array, Optional[dict]]:
     from repro.models.linear import linear_apply
     b, t, _ = x.shape
     hd = cfg.head_dim
@@ -236,6 +237,24 @@ def gqa_apply(cfg, params, x, *, ctx: ParallelCtx, cos_sin=None,
     window = cfg.local_window if local else 0
     scale = cfg.query_scale if cfg.query_scale > 0 else None
     new_cache = None
+    if paged_tables is not None:
+        # paged decode: the cache leaves are the pool's page stores
+        # (num_blocks, block_size, hkv, hd); write this token's K/V straight
+        # into its page and attend through the block-table indirection —
+        # no contiguous copy of the KV history is ever materialized.
+        assert pos is not None and t == 1, "paged path is decode-only"
+        from repro.kernels import ops as kops
+        bs = cache["k"].shape[1]
+        blk = jnp.take_along_axis(paged_tables, (pos // bs)[:, None],
+                                  axis=1)[:, 0]
+        kf = cache["k"].at[blk, pos % bs].set(k[:, 0].astype(cache["k"].dtype))
+        vf = cache["v"].at[blk, pos % bs].set(v[:, 0].astype(cache["v"].dtype))
+        o = kops.paged_attention(
+            q[:, 0], kf, vf, paged_tables, pos + 1, scale=scale,
+            cap=cfg.attn_logit_softcap, window=window,
+            impl=ctx.paged_attn_impl)[:, None].astype(q.dtype)
+        y = linear_apply(params["wo"], o.reshape(b, t, cfg.n_heads * hd))
+        return y, {"k": kf, "v": vf}
     if cache is not None:
         if pos is None:                                   # prefill: fill [0, t)
             kf = cache["k"].at[:, :t].set(k.astype(cache["k"].dtype))

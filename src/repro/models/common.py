@@ -25,6 +25,8 @@ class ParallelCtx:
     moe_capacity_factor: Optional[float] = None     # override cfg capacity
     use_pallas: bool = False                        # TPU flash-attention kernel
     mlstm_chunkwise: bool = False                   # chunkwise-parallel mLSTM
+    paged_attn_impl: Optional[str] = None           # paged decode kernel: None/
+                                                    # "auto" | "pallas" | "ref"
 
     @property
     def model_size(self) -> int:

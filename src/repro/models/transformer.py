@@ -150,7 +150,7 @@ def block_init(key, cfg: ModelConfig, spec: SubSpec, dtype=jnp.float32):
 
 
 def block_apply(cfg, spec: SubSpec, params, x, *, ctx: ParallelCtx,
-                cos_sin, cache=None, pos=None):
+                cos_sin, cache=None, pos=None, paged_tables=None):
     """Returns (x, aux, new_cache)."""
     _, norm = make_norm(cfg)
     res_scale = (cfg.scale_depth / math.sqrt(cfg.n_layers)
@@ -160,7 +160,8 @@ def block_apply(cfg, spec: SubSpec, params, x, *, ctx: ParallelCtx,
     mixer_kw = dict(ctx=ctx, cache=None if cache is None else cache.get("mixer"),
                     pos=pos)
     if spec.kind == "attn":
-        mixer_kw.update(cos_sin=cos_sin, local=spec.is_local)
+        mixer_kw.update(cos_sin=cos_sin, local=spec.is_local,
+                        paged_tables=paged_tables)
     h, new_mixer_cache = _MIXER_APPLY[spec.kind](
         cfg, params["mixer"], norm(params["norm1"], x), **mixer_kw)
     if cfg.post_block_norm:
@@ -279,7 +280,7 @@ class LM:
 
     # ---------------- backbone ----------------------------------------------
     def _backbone(self, params, x, *, ctx: ParallelCtx, cache=None, pos=None,
-                  remat: str = "none", capture=None):
+                  paged_tables=None, remat: str = "none", capture=None):
         cfg = self.cfg
         prefix, period, n_rep = period_specs(cfg)
         b, t = x.shape[0], x.shape[1]
@@ -293,7 +294,8 @@ class LM:
             if capture is not None:
                 lp = capture.wrap(lp, f"prefix/{i}")
             x, aux, nc = block_apply(cfg, spec, lp, x,
-                                     ctx=ctx, cos_sin=cos_sin, cache=c, pos=pos)
+                                     ctx=ctx, cos_sin=cos_sin, cache=c, pos=pos,
+                                     paged_tables=paged_tables)
             aux_total += aux
             new_prefix_caches.append(nc)
 
@@ -318,7 +320,8 @@ class LM:
             for j, spec in enumerate(period):
                 c = blk_cache[f"sub{j}"] if blk_cache is not None else None
                 x, a, nc = block_apply(cfg, spec, blk[f"sub{j}"], x, ctx=ctx,
-                                       cos_sin=cos_sin, cache=c, pos=pos)
+                                       cos_sin=cos_sin, cache=c, pos=pos,
+                                       paged_tables=paged_tables)
                 aux = aux + a
                 new_caches[f"sub{j}"] = nc
             x = constrain_act(x, ctx)
@@ -406,11 +409,18 @@ class LM:
         return self._logits(params, h[:, -1:]), cache
 
     def decode_step(self, params, tokens, cache, pos, *,
-                    ctx: ParallelCtx = CPU_CTX, compute_dtype=jnp.bfloat16):
+                    ctx: ParallelCtx = CPU_CTX, compute_dtype=jnp.bfloat16,
+                    block_tables=None):
         """tokens: (B, 1) int32; pos: scalar int32 or (B,) int32 vector of
-        per-request positions being written (continuous batching)."""
+        per-request positions being written (continuous batching).
+
+        With ``block_tables`` (B, nb) the cache is the paged view from
+        ``BlockPool.paged_cache`` — attention layers read/write the page
+        stores through the table indirection instead of a contiguous cache.
+        """
         x = self._embed(params, tokens).astype(compute_dtype)
-        h, _, cache = self._backbone(params, x, ctx=ctx, cache=cache, pos=pos)
+        h, _, cache = self._backbone(params, x, ctx=ctx, cache=cache, pos=pos,
+                                     paged_tables=block_tables)
         return self._logits(params, h)[:, 0], cache
 
 

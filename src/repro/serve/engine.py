@@ -14,29 +14,54 @@ immediately. Per-request sampling params (greedy + temperature) are applied
 row-wise; sampling keys are folded per (seed, output index) so a preempted
 request resumes on the same trajectory.
 
-The batch each step is assembled by gathering block tables into exactly the
-contiguous pytree ``init_cache`` would have produced, so the existing jitted
-``prefill``/``decode_step`` functions run unchanged — under greedy decoding
-the continuous engine is token-identical to ``ServeEngine``
+Decode read path: by default (``paged_kernel=True`` where the model
+supports it) each step passes the pool's page stores *directly* into the
+jitted ``decode_step`` together with the per-request block tables — the
+attention layers resolve the indirection in-kernel
+(``kernels/paged_attention.py``) and write the new token into its page, so
+no contiguous copy of the KV history is ever materialized and the updated
+page stores flow straight back into the pool (``absorb_paged`` swaps array
+references; the cache argument is donated so XLA updates pages in place).
+The legacy gather path (``paged_kernel=False``) assembles the contiguous
+pytree ``init_cache`` would have produced and remains the oracle — under
+greedy decoding both are token-identical to ``ServeEngine``
 (tests/test_serve_continuous.py asserts this).
 
-XLA recompiles when the (batch, blocks-per-request) envelope grows; on TPU
-you would pad both to fixed buckets — on the CPU smoke path we keep shapes
-honest and eat the compile.
+Shape buckets: the decode batch is padded to the next size in
+``bucket_sizes`` and the block envelope to the next power of two, so
+``step()`` hits a small closed set of jit signatures instead of recompiling
+every time traffic shifts; ``metrics()["decode_compiles"]`` exposes the
+compile-cache counter that tests/test_serve_buckets.py guards. Padding rows
+read/write the pool's trash block and trash state slot.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Iterator, List, Optional
+from typing import Dict, Iterator, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.common import CPU_CTX, ParallelCtx
+from repro.models.transformer import LM
 from repro.serve.paged_cache import BlockPool
 from repro.serve.scheduler import Request, Scheduler
+
+
+def _pow2_at_least(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def default_bucket_sizes(max_running: int) -> tuple:
+    """Power-of-two batch buckets covering [1, max_running]."""
+    sizes = []
+    b = 1
+    while b < max_running:
+        sizes.append(b)
+        b *= 2
+    return tuple(sizes) + (max_running,)
 
 
 @dataclasses.dataclass
@@ -109,9 +134,14 @@ class ContinuousEngine:
     def __init__(self, model, params, *, ctx: ParallelCtx = CPU_CTX,
                  compute_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
                  block_size: int = 16, num_blocks: int = 512,
-                 max_running: int = 8):
+                 max_running: int = 8,
+                 paged_kernel: Optional[bool] = None,
+                 paged_attn_impl: Optional[str] = None,
+                 bucket_sizes: Optional[Sequence[int]] = None):
         self.model = model
         self.params = params
+        if paged_attn_impl is not None:
+            ctx = dataclasses.replace(ctx, paged_attn_impl=paged_attn_impl)
         self.ctx = ctx
         self.compute_dtype = compute_dtype
         self.cache_dtype = cache_dtype
@@ -120,9 +150,24 @@ class ContinuousEngine:
                               block_size=block_size,
                               max_requests=max_running, dtype=cache_dtype)
         self.scheduler = Scheduler(self.pool, max_running=max_running)
+        # the paged read path needs attention layers that understand page
+        # stores: decoder-only/VLM/hybrid LMs with plain GQA K/V caches
+        # (MLA keeps latent caches; enc-dec models route through EncDecLM)
+        supported = isinstance(model, LM) and not model.cfg.kv_lora_rank
+        self.paged_kernel = supported if paged_kernel is None else paged_kernel
+        if self.paged_kernel and not supported:
+            raise ValueError(
+                "paged decode kernel unsupported for this model (MLA/enc-dec)")
+        buckets = set(bucket_sizes or default_bucket_sizes(max_running))
+        buckets.add(max_running)        # largest bucket must cover the batch
+        self.bucket_sizes = tuple(sorted(buckets))
         self.finished: List[Request] = []
         self._next_id = 0
         self._start_time: Optional[float] = None
+        self._decode_shapes: set = set()
+        self._decode_time = 0.0              # steady-state (post-compile) ...
+        self._decode_tokens = 0              # ... decode wall time / tokens
+        self._decode_steps = 0
         m, cd = model, compute_dtype
         self._prefill = jax.jit(
             lambda p, tk, c, **kw: m.prefill(p, tk, c, ctx=ctx,
@@ -130,6 +175,12 @@ class ContinuousEngine:
         self._decode = jax.jit(
             lambda p, tk, c, pos: m.decode_step(p, tk, c, pos, ctx=ctx,
                                                 compute_dtype=cd))
+        # page stores are donated so XLA writes the new token in place
+        # instead of copying every page each step
+        self._decode_paged = jax.jit(
+            lambda p, tk, c, pos, bt: m.decode_step(
+                p, tk, c, pos, ctx=ctx, compute_dtype=cd, block_tables=bt),
+            donate_argnums=(2,))
         self._sample = jax.jit(_sample_rows)
 
     # ------------------------------------------------------------------ API
@@ -211,13 +262,32 @@ class ContinuousEngine:
             rows.append(np.concatenate([prompts[i], out]))
         return jnp.asarray(np.stack(rows), jnp.int32)
 
+    def decode_compile_count(self) -> int:
+        """Entries in the decode jit compile caches (the recompile counter
+        that shape bucketing keeps ≤ the number of shape buckets)."""
+        try:
+            return int(self._decode._cache_size()
+                       + self._decode_paged._cache_size())
+        except AttributeError:   # older jax: fall back to signatures seen
+            return len(self._decode_shapes)
+
     def metrics(self) -> Dict[str, float]:
         """Aggregate serving metrics over finished requests."""
         fin = self.finished
+        decode = {
+            "decode_compiles": self.decode_compile_count(),
+            "decode_shapes": len(self._decode_shapes),
+            "decode_steps": self._decode_steps,
+            # steady-state decode throughput: steps that compiled a new
+            # (batch, blocks) signature are excluded from the timer
+            "decode_tok_per_s": (self._decode_tokens /
+                                 max(self._decode_time, 1e-9)
+                                 if self._decode_tokens else 0.0),
+        }
         if not fin:
             return {"requests": 0, "requests_per_sec": 0.0, "new_tokens": 0,
                     "tokens_per_sec": 0.0, "mean_ttft_s": float("nan"),
-                    "max_ttft_s": float("nan"), "preemptions": 0}
+                    "max_ttft_s": float("nan"), "preemptions": 0, **decode}
         ttfts = [r.ttft for r in fin if r.ttft is not None]
         new_tokens = sum(len(r.out_tokens) for r in fin)
         elapsed = max(max(r.finish_time for r in fin) - self._start_time,
@@ -230,15 +300,26 @@ class ContinuousEngine:
             "mean_ttft_s": float(np.mean(ttfts)) if ttfts else float("nan"),
             "max_ttft_s": float(np.max(ttfts)) if ttfts else float("nan"),
             "preemptions": sum(r.preemptions for r in fin),
+            **decode,
         }
 
     # ------------------------------------------------------------ internals
-    def _sample_tokens(self, logits, reqs) -> np.ndarray:
-        temps = jnp.asarray([r.temperature for r in reqs], jnp.float32)
+    def _bucket_batch(self, n: int) -> int:
+        for b in self.bucket_sizes:
+            if b >= n:
+                return b
+        return n
+
+    def _sample_tokens(self, logits, reqs, pad_to: int = 0) -> np.ndarray:
+        """Row-wise sampling; rows past ``len(reqs)`` are bucket padding
+        (sampled greedily on garbage logits, discarded by the caller)."""
+        pad = max(pad_to - len(reqs), 0)
+        temps = jnp.asarray([r.temperature for r in reqs] + [0.0] * pad,
+                            jnp.float32)
         keys = jnp.stack([
             jax.random.fold_in(jax.random.PRNGKey(r.seed), len(r.out_tokens))
-            for r in reqs])
-        return np.asarray(self._sample(logits, temps, keys))
+            for r in reqs] + [jax.random.PRNGKey(0)] * pad)
+        return np.asarray(self._sample(logits, temps, keys))[:len(reqs)]
 
     def _prefill_request(self, req: Request) -> None:
         tokens = req.prefill_tokens()
@@ -273,14 +354,38 @@ class ContinuousEngine:
                     raise MemoryError(
                         "block pool too small for a single request")
         ids = [r.req_id for r in running]
-        cache = self.pool.gather_batch(ids)
-        tok = jnp.asarray([[r.out_tokens[-1]] for r in running], jnp.int32)
-        pos = jnp.asarray([r.cache_len for r in running], jnp.int32)
-        logits, cache = self._decode(self.params, tok, cache, pos)
-        self.pool.scatter_token(ids, cache, pos)
+        b_real = len(ids)
+        # bucket the (batch, blocks) envelope to a closed signature set;
+        # padding rows carry pos 0 and all-trash tables/slots
+        b_pad = self._bucket_batch(b_real)
+        nb_pad = _pow2_at_least(self.pool.max_table_blocks(ids))
+        sig = (b_pad, nb_pad, self.paged_kernel)
+        fresh = sig not in self._decode_shapes
+        self._decode_shapes.add(sig)
+        tables = self.pool.padded_tables(ids, rows=b_pad, blocks=nb_pad)
+        tok = jnp.asarray([[r.out_tokens[-1]] for r in running]
+                          + [[0]] * (b_pad - b_real), jnp.int32)
+        pos = jnp.asarray([r.cache_len for r in running]
+                          + [0] * (b_pad - b_real), jnp.int32)
+        t0 = time.perf_counter()
+        if self.paged_kernel:
+            cache = self.pool.paged_cache(ids, rows=b_pad)
+            logits, cache = self._decode_paged(self.params, tok, cache, pos,
+                                               tables)
+            self.pool.absorb_paged(ids, cache, rows=b_pad)
+        else:
+            cache = self.pool.gather_batch(ids, rows=b_pad, blocks=nb_pad)
+            logits, cache = self._decode(self.params, tok, cache, pos)
+            self.pool.scatter_token(ids, cache, pos, rows=b_pad,
+                                    blocks=nb_pad)
+        logits = jax.block_until_ready(logits)
+        self._decode_steps += 1
+        if not fresh:                       # steady-state timer: skip compiles
+            self._decode_time += time.perf_counter() - t0
+            self._decode_tokens += b_real
         for r in running:
             r.cache_len += 1
-        nxt = self._sample_tokens(logits, running)
+        nxt = self._sample_tokens(logits, running, pad_to=b_pad)
         done = []
         for r, t in zip(running, nxt):
             r.out_tokens.append(int(t))

@@ -1,29 +1,35 @@
 """Paged KV-cache block pool for continuous batching.
 
-The pool owns all KV storage as fixed-size *token blocks* plus a per-request
-*state* store, and hands the engine contiguous padded views on demand:
+The pool owns all KV storage as fixed-size *token pages* plus a per-request
+*state* store, and exposes two read paths:
 
-  * token-axis cache leaves (attention K/V, MLA latents) are stored as
-    ``(num_blocks, block_size, *tail)`` and addressed through per-request
-    block tables (free-list allocator, alloc/extend/free at block
-    granularity) — no request ever reserves ``max_len`` slots up front;
-  * per-request state leaves (mamba/xLSTM recurrent state, whisper cross
-    K/V — anything whose shape does not scale with ``max_len``) live in a
-    ``(max_requests, *tail)`` slot store.
+  * **paged** (the decode hot path): ``paged_cache()`` hands the model the
+    page stores *themselves* — token leaves are kept in the leaf's original
+    axis order with the (batch, token) axes replaced by (num_blocks,
+    block_size), so a stacked-blocks leaf ``(n_rep, B, T, Hkv, hd)`` is
+    stored as ``(n_rep, num_blocks, bs, Hkv, hd)`` and slots zero-copy into
+    the model's layer scan. The attention layers read the block-table
+    indirection directly (``kernels/paged_attention.py``) and write the new
+    token into its page in place; ``absorb_paged()`` then just swaps array
+    references. No per-step gather or scatter of the cache.
+  * **gather** (fallback/oracle): ``gather_batch`` indexes the pool with a
+    padded ``(B, nb)`` block-table matrix to assemble exactly the pytree
+    ``init_cache`` would have produced, feeding the unmodified jitted
+    ``prefill``/``decode_step``; ``scatter_token`` writes back only the page
+    each request decoded into.
 
 Which leaf is which is *probed*, not hard-coded: ``CacheLayout`` calls the
-model's ``init_cache`` hook at two lengths and two batch sizes and diffs leaf
-shapes, so the same pool works for decoder-only, enc-dec and VLM layouts
-without per-model plumbing.
+model's ``init_cache`` hook at two lengths and two batch sizes and diffs
+leaf shapes, so decoder-only, enc-dec, VLM and recurrent layouts all work
+unmodified. Token-axis leaves (attention K/V, MLA latents) go to pages;
+everything else (mamba/xLSTM recurrent state, whisper cross K/V) lives in a
+per-request slot store.
 
-The read path is gather-based: ``gather_batch`` indexes the pool with a
-padded ``(B, nb)`` block-table matrix to assemble exactly the pytree
-``init_cache`` would have produced for a contiguous batch, which feeds the
-existing jitted ``prefill``/``decode_step`` unchanged. ``scatter_token``
-writes back only the block each request just decoded into (O(block_size)
-per step, not O(T)). Block 0 is a reserved trash block: table padding points
-at it, so ragged batches scatter garbage nowhere that matters, and the
-causal mask (per-request positions) hides whatever is gathered from it.
+Two trash locations absorb batch padding (shape buckets pad ``B`` and
+``nb`` to a closed set of jit signatures): block 0 is the reserved trash
+page (table padding points at it), and slot ``max_requests`` is the
+reserved trash state slot — padded rows gather/scatter garbage nowhere that
+matters, and the per-request causal masks hide whatever they read.
 """
 from __future__ import annotations
 
@@ -40,6 +46,24 @@ class LeafSpec:
     batch_axis: int            # axis indexed by request
     token_axis: Optional[int]  # axis that scales with max_len; None => state
     tail: Tuple[int, ...]      # shape with batch (and token) axes removed
+
+    @property
+    def blocks_axis(self) -> int:
+        """Position of the page axis in the token store (= token axis after
+        the batch axis is dropped)."""
+        assert self.token_axis is not None
+        return self.token_axis - (1 if self.batch_axis < self.token_axis
+                                  else 0)
+
+    @property
+    def slot_axis(self) -> int:
+        """Position of the slot axis in the state store."""
+        return self.batch_axis
+
+
+def _ix(axis: int, idx) -> tuple:
+    """Index tuple selecting ``idx`` at ``axis`` (slices before it)."""
+    return (slice(None),) * axis + (idx,)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,26 +95,22 @@ class CacheLayout:
                            tuple(x.dtype for x in jax.tree.leaves(c11)))
 
 
-def _to_pool_order(leaf, spec: LeafSpec):
-    """(… batch … token …) -> (batch, token, *tail) for token leaves,
-    (batch, *tail) for state leaves."""
-    if spec.token_axis is None:
-        return jnp.moveaxis(leaf, spec.batch_axis, 0)
-    return jnp.moveaxis(leaf, (spec.batch_axis, spec.token_axis), (0, 1))
+def _token_store_shape(sp: LeafSpec, num_blocks: int, block_size: int):
+    ax = sp.blocks_axis
+    return sp.tail[:ax] + (num_blocks, block_size) + sp.tail[ax:]
 
 
-def _from_pool_order(arr, spec: LeafSpec):
-    if spec.token_axis is None:
-        return jnp.moveaxis(arr, 0, spec.batch_axis)
-    return jnp.moveaxis(arr, (0, 1), (spec.batch_axis, spec.token_axis))
+def _state_store_shape(sp: LeafSpec, n_slots: int):
+    ax = sp.slot_axis
+    return sp.tail[:ax] + (n_slots,) + sp.tail[ax:]
 
 
 class BlockPool:
     """Free-list block allocator + pooled storage for one model's cache.
 
-    Block 0 is reserved (trash). ``alloc``/``extend``/``free`` manage the
-    python-side accounting; the array ops (``gather_batch``, ``scatter_*``)
-    are jitted and shape-stable in (B, nb).
+    Block 0 and slot ``max_requests`` are reserved (trash, absorb bucket
+    padding). ``alloc``/``extend``/``free`` manage the python-side
+    accounting; the array ops are jitted and shape-stable in (B, nb).
     """
 
     def __init__(self, model, *, num_blocks: int, block_size: int,
@@ -105,13 +125,13 @@ class BlockPool:
         self._tables: Dict[int, List[int]] = {}
         self._slots: Dict[int, int] = {}
         self._free_slots: List[int] = list(range(max_requests - 1, -1, -1))
-        # pooled token storage + per-request state store
+        # pooled token pages + per-request state store (last slot = trash)
         self.token_store = [
-            jnp.zeros((num_blocks, block_size) + sp.tail, dt)
+            jnp.zeros(_token_store_shape(sp, num_blocks, block_size), dt)
             for sp, dt in zip(self.layout.specs, self.layout.dtypes)
             if sp.token_axis is not None]
         self.state_store = [
-            jnp.zeros((max_requests,) + sp.tail, dt)
+            jnp.zeros(_state_store_shape(sp, max_requests + 1), dt)
             for sp, dt in zip(self.layout.specs, self.layout.dtypes)
             if sp.token_axis is None]
 
@@ -127,6 +147,10 @@ class BlockPool:
     @property
     def free_slots(self) -> int:
         return len(self._free_slots)
+
+    @property
+    def trash_slot(self) -> int:
+        return self.max_requests
 
     def blocks_for(self, n_tokens: int) -> int:
         return -(-max(n_tokens, 1) // self.block_size)
@@ -162,7 +186,8 @@ class BlockPool:
     def _zero(self, blks: List[int]) -> None:
         # reused blocks must read as zeros, not stale KV from a freed request
         if blks and self.token_store:
-            self.token_store = _zero_blocks(self.token_store,
+            self.token_store = _zero_blocks(tuple(self.layout.specs),
+                                            self.token_store,
                                             jnp.asarray(blks, jnp.int32))
 
     def free(self, req_id: int) -> None:
@@ -175,27 +200,69 @@ class BlockPool:
     def slot(self, req_id: int) -> int:
         return self._slots[req_id]
 
-    def padded_tables(self, req_ids) -> jnp.ndarray:
-        """(B, nb) int32 block tables, ragged rows padded with the trash
-        block; nb is the max table length over the batch."""
-        nb = max(len(self._tables[r]) for r in req_ids)
-        rows = [self._tables[r] + [0] * (nb - len(self._tables[r]))
-                for r in req_ids]
-        return jnp.asarray(rows, jnp.int32)
+    def max_table_blocks(self, req_ids) -> int:
+        return max(len(self._tables[r]) for r in req_ids)
 
-    def slots(self, req_ids) -> jnp.ndarray:
-        return jnp.asarray([self._slots[r] for r in req_ids], jnp.int32)
+    def padded_tables(self, req_ids, *, rows: Optional[int] = None,
+                      blocks: Optional[int] = None) -> jnp.ndarray:
+        """(rows, blocks) int32 block tables. Ragged rows are padded with
+        the trash block; extra rows (batch-bucket padding) are all-trash."""
+        nb = self.max_table_blocks(req_ids)
+        nb = max(blocks or nb, nb)
+        b = max(rows or len(req_ids), len(req_ids))
+        rows_ = [self._tables[r] + [0] * (nb - len(self._tables[r]))
+                 for r in req_ids]
+        rows_ += [[0] * nb] * (b - len(req_ids))
+        return jnp.asarray(rows_, jnp.int32)
 
-    # ------------------------------------------------------------- array ops
-    def gather_batch(self, req_ids):
+    def slots(self, req_ids, *, rows: Optional[int] = None) -> jnp.ndarray:
+        s = [self._slots[r] for r in req_ids]
+        b = max(rows or len(req_ids), len(req_ids))
+        s += [self.trash_slot] * (b - len(req_ids))
+        return jnp.asarray(s, jnp.int32)
+
+    # ------------------------------------------------------ paged (hot path)
+    def paged_cache(self, req_ids, *, rows: Optional[int] = None):
+        """Cache pytree for the paged decode path: token leaves are the page
+        stores themselves (original axis order — zero copy), state leaves
+        are gathered per-slot for the (padded) batch."""
+        state = _gather_state(tuple(self.layout.specs), self.state_store,
+                              self.slots(req_ids, rows=rows))
+        leaves, ti, si = [], 0, 0
+        for sp in self.layout.specs:
+            if sp.token_axis is None:
+                leaves.append(state[si])
+                si += 1
+            else:
+                leaves.append(self.token_store[ti])
+                ti += 1
+        return jax.tree.unflatten(self.layout.treedef, leaves)
+
+    def absorb_paged(self, req_ids, cache, *, rows: Optional[int] = None) -> None:
+        """Take back the cache returned by a paged decode step: token leaves
+        ARE the updated page stores (swap references); state leaves are
+        scattered back into their slots (padding rows hit the trash slot)."""
+        token, state = [], []
+        for sp, leaf in zip(self.layout.specs, jax.tree.leaves(cache)):
+            (state if sp.token_axis is None else token).append(leaf)
+        self.token_store = token
+        if state:
+            self.state_store = _scatter_state(
+                tuple(self.layout.specs), self.state_store, tuple(state),
+                self.slots(req_ids, rows=rows))
+
+    # --------------------------------------------------- gather (oracle path)
+    def gather_batch(self, req_ids, *, rows: Optional[int] = None,
+                     blocks: Optional[int] = None):
         """Assemble the contiguous batched cache pytree for ``req_ids``.
 
         Returns a pytree identical in structure to
         ``model.init_cache(B, nb * block_size)`` — directly consumable by the
-        jitted prefill/decode functions.
+        jitted prefill/decode functions. ``rows``/``blocks`` pad the batch
+        and page envelope to bucket sizes (padding rows read trash).
         """
-        tables = self.padded_tables(req_ids)
-        slots = self.slots(req_ids)
+        tables = self.padded_tables(req_ids, rows=rows, blocks=blocks)
+        slots = self.slots(req_ids, rows=rows)
         leaves = _gather(tuple(self.layout.specs), self.block_size,
                          self.token_store, self.state_store, tables, slots)
         return jax.tree.unflatten(self.layout.treedef, leaves)
@@ -205,34 +272,70 @@ class BlockPool:
         contiguous cache (plus all state leaves) back into the pool."""
         tables = self.padded_tables(req_ids)
         nb_used = self.blocks_for(n_tokens)
-        self.token_store, new_state = _scatter_prefill(
+        self.token_store, self.state_store = _scatter_prefill(
             tuple(self.layout.specs), self.block_size, nb_used,
             self.token_store, self.state_store,
             tuple(jax.tree.leaves(cache)), tables, self.slots(req_ids))
-        self.state_store = new_state
 
-    def scatter_token(self, req_ids, cache, positions) -> None:
-        """Write back the single block each request decoded into (the block
-        containing ``positions[i]``) plus updated state leaves."""
-        tables = self.padded_tables(req_ids)
+    def scatter_token(self, req_ids, cache, positions, *,
+                      rows: Optional[int] = None,
+                      blocks: Optional[int] = None) -> None:
+        """Write back the single page each request decoded into (the block
+        containing ``positions[i]``) plus updated state leaves. ``positions``
+        must already be padded to ``rows`` (padding rows write trash);
+        ``blocks`` pads the table width to the same bucket the cache was
+        gathered with, keeping this op's jit signature bucketed too."""
+        tables = self.padded_tables(req_ids, rows=rows, blocks=blocks)
         self.token_store, self.state_store = _scatter_token(
             tuple(self.layout.specs), self.block_size,
             self.token_store, self.state_store,
-            tuple(jax.tree.leaves(cache)), tables, self.slots(req_ids),
+            tuple(jax.tree.leaves(cache)), tables,
+            self.slots(req_ids, rows=rows),
             jnp.asarray(positions, jnp.int32))
 
 
 # ---------------------------------------------------------------------------
-# jitted pool <-> contiguous-batch converters
+# jitted pool <-> batch converters
 #
 # The store arguments of the in-place update ops are donated so XLA reuses
 # the pool buffers instead of copying the whole pool every step; the pool
 # immediately replaces its references with the returned arrays.
+#
+# Token stores keep the leaf's original axis order, so indexing happens at
+# ``spec.blocks_axis`` (resp. ``spec.slot_axis``) rather than axis 0; the
+# only data ever transposed is the gathered batch-sized slice, never a pool.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _zero_blocks(token_store, ids):
-    return [s.at[ids].set(0) for s in token_store]
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def _zero_blocks(specs, token_store, ids):
+    token_specs = [sp for sp in specs if sp.token_axis is not None]
+    return [s.at[_ix(sp.blocks_axis, ids)].set(0)
+            for sp, s in zip(token_specs, token_store)]
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _gather_state(specs, state_store, slots):
+    """slots: (B,). Returns state leaves in original axis order."""
+    out, si = [], 0
+    for sp in specs:
+        if sp.token_axis is not None:
+            continue
+        out.append(jnp.take(state_store[si], slots, axis=sp.slot_axis))
+        si += 1
+    return out
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def _scatter_state(specs, state_store, state_leaves, slots):
+    new_state, si = list(state_store), 0
+    for sp in specs:
+        if sp.token_axis is not None:
+            continue
+        leaf = state_leaves[si]
+        new_state[si] = new_state[si].at[_ix(sp.slot_axis, slots)].set(
+            leaf.astype(new_state[si].dtype))
+        si += 1
+    return new_state
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1))
@@ -242,13 +345,15 @@ def _gather(specs, block_size, token_store, state_store, tables, slots):
     out, ti, si = [], 0, 0
     for sp in specs:
         if sp.token_axis is None:
-            arr = state_store[si][slots]                     # (B, *tail)
+            out.append(jnp.take(state_store[si], slots, axis=sp.slot_axis))
             si += 1
-        else:
-            g = token_store[ti][tables]                      # (B, nb, bs, *tail)
-            arr = g.reshape((b, nb * block_size) + g.shape[3:])
-            ti += 1
-        out.append(_from_pool_order(arr, sp))
+            continue
+        ax = sp.blocks_axis
+        g = jnp.take(token_store[ti], tables, axis=ax)   # pre+(B,nb,bs)+post
+        g = g.reshape(g.shape[:ax] + (b, nb * block_size) + g.shape[ax + 3:])
+        # batch now sits where the page axis was; restore the original order
+        out.append(jnp.moveaxis(g, ax, sp.batch_axis))
+        ti += 1
     return out
 
 
@@ -259,17 +364,22 @@ def _scatter_prefill(specs, block_size, nb_used, token_store, state_store,
     new_token, new_state = list(token_store), list(state_store)
     ti, si = 0, 0
     for sp, leaf in zip(specs, cache_leaves):
-        arr = _to_pool_order(leaf, sp)                       # (B, T, *tail)
         if sp.token_axis is None:
-            new_state[si] = new_state[si].at[slots].set(
-                arr.astype(new_state[si].dtype))
+            new_state[si] = new_state[si].at[_ix(sp.slot_axis, slots)].set(
+                leaf.astype(new_state[si].dtype))
             si += 1
             continue
+        ax = sp.blocks_axis
         t_used = nb_used * block_size
-        blk = arr[:, :t_used].reshape(
-            (b, nb_used, block_size) + arr.shape[2:])
-        ids = tables[:, :nb_used]                            # (B, nb_used)
-        new_token[ti] = new_token[ti].at[ids].set(
+        blk = jnp.take(leaf, jnp.arange(t_used), axis=sp.token_axis)
+        blk = blk.reshape(blk.shape[:sp.token_axis] + (nb_used, block_size)
+                          + blk.shape[sp.token_axis + 1:])
+        # move batch to just before the page axis (splitting the token axis
+        # shifted it by one when it followed the token axis)
+        b_src = sp.batch_axis + (1 if sp.batch_axis > sp.token_axis else 0)
+        blk = jnp.moveaxis(blk, b_src, ax)               # pre+(B,nb,bs)+post
+        ids = tables[:, :nb_used]                        # (B, nb_used)
+        new_token[ti] = new_token[ti].at[_ix(ax, ids)].set(
             blk.astype(new_token[ti].dtype))
         ti += 1
     return new_token, new_state
@@ -278,23 +388,25 @@ def _scatter_prefill(specs, block_size, nb_used, token_store, state_store,
 @functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(2, 3))
 def _scatter_token(specs, block_size, token_store, state_store,
                    cache_leaves, tables, slots, positions):
-    """Write back only the block containing ``positions[i]`` per request."""
-    blk_idx = positions // block_size                        # (B,)
+    """Write back only the page containing ``positions[i]`` per request."""
+    blk_idx = positions // block_size                    # (B,)
     blk_ids = jnp.take_along_axis(tables, blk_idx[:, None], axis=1)[:, 0]
     new_token, new_state = list(token_store), list(state_store)
     ti, si = 0, 0
     for sp, leaf in zip(specs, cache_leaves):
-        arr = _to_pool_order(leaf, sp)                       # (B, T, *tail)
         if sp.token_axis is None:
-            new_state[si] = new_state[si].at[slots].set(
-                arr.astype(new_state[si].dtype))
+            new_state[si] = new_state[si].at[_ix(sp.slot_axis, slots)].set(
+                leaf.astype(new_state[si].dtype))
             si += 1
             continue
+        arr = jnp.moveaxis(leaf, (sp.batch_axis, sp.token_axis), (0, 1))
         slab = jax.vmap(
             lambda a, i: jax.lax.dynamic_slice_in_dim(
                 a, i * block_size, block_size, axis=0)
-        )(arr, blk_idx)                                      # (B, bs, *tail)
-        new_token[ti] = new_token[ti].at[blk_ids].set(
+        )(arr, blk_idx)                                  # (B, bs, *tail)
+        ax = sp.blocks_axis
+        slab = jnp.moveaxis(slab, (0, 1), (ax, ax + 1))  # pre+(B,bs)+post
+        new_token[ti] = new_token[ti].at[_ix(ax, blk_ids)].set(
             slab.astype(new_token[ti].dtype))
         ti += 1
     return new_token, new_state

@@ -1,0 +1,187 @@
+"""Paged-attention decode path + shape buckets: parity and recompile guards.
+
+Three-way token parity (greedy): the paged-kernel read path must match the
+gather-into-contiguous path and the legacy fixed-batch ``ServeEngine``
+oracle, across staggered mixed-length traces, preemption, GQA configs with
+sliding window + logit softcap (gemma2), and with the actual Pallas kernel
+executing in interpret mode. Plus: a request joining exactly at a bucket
+edge, and the compile-cache counter staying ≤ the shape-bucket count.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serve import ContinuousEngine, ServeEngine
+from repro.serve.engine import default_bucket_sizes
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = get_smoke_config("smollm_135m")
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def gemma2():
+    """GQA with local sliding-window layers and attn logit softcap."""
+    cfg = get_smoke_config("gemma2_27b")
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _cont(model, params, **kw):
+    kw.setdefault("block_size", 4)
+    kw.setdefault("num_blocks", 64)
+    kw.setdefault("max_running", 4)
+    return ContinuousEngine(model, params, compute_dtype=jnp.float32,
+                            cache_dtype=jnp.float32, **kw)
+
+
+def _oracle_tokens(model, params, prompt, n):
+    leg = ServeEngine(model, params, compute_dtype=jnp.float32,
+                      cache_dtype=jnp.float32)
+    return np.asarray(leg.generate(jnp.asarray(prompt)[None],
+                                   max_new_tokens=n))[0, len(prompt):]
+
+
+def _staggered(eng, prompts, news):
+    ids = []
+    for p, n in zip(prompts, news):
+        ids.append(eng.submit(p, n))
+        eng.step()                          # join mid-decode
+    eng.run()
+    fin = {r.req_id: r for r in eng.finished}
+    return [np.asarray(fin[i].out_tokens) for i in ids]
+
+
+class TestPagedParity:
+    def test_paged_vs_gather_vs_oracle_mixed_trace(self, smollm):
+        cfg, model, params = smollm
+        rng = np.random.RandomState(0)
+        lens, news = [3, 9, 5, 12], [5, 3, 7, 2]
+        prompts = [rng.randint(0, cfg.vocab_size, (l,)).astype(np.int32)
+                   for l in lens]
+        paged = _staggered(_cont(model, params, paged_kernel=True),
+                           prompts, news)
+        gathered = _staggered(_cont(model, params, paged_kernel=False),
+                              prompts, news)
+        for p, n, a, b in zip(prompts, news, paged, gathered):
+            ref = _oracle_tokens(model, params, p, n)
+            np.testing.assert_array_equal(ref, a, err_msg="paged != oracle")
+            np.testing.assert_array_equal(ref, b, err_msg="gather != oracle")
+
+    def test_paged_interpret_kernel_in_engine(self, smollm):
+        """The real Pallas kernel (interpret mode) drives a whole serve."""
+        cfg, model, params = smollm
+        rng = np.random.RandomState(3)
+        prompts = [rng.randint(0, cfg.vocab_size, (l,)).astype(np.int32)
+                   for l in (4, 7)]
+        eng = _cont(model, params, paged_kernel=True,
+                    paged_attn_impl="pallas")
+        out = _staggered(eng, prompts, [3, 3])
+        for p, got in zip(prompts, out):
+            np.testing.assert_array_equal(
+                _oracle_tokens(model, params, p, 3), got)
+
+    def test_paged_preemption_parity(self, smollm):
+        """Pool pressure forces preemption; the paged path must resume every
+        request on the same greedy trajectory."""
+        cfg, model, params = smollm
+        rng = np.random.RandomState(1)
+        prompts = [rng.randint(0, cfg.vocab_size, (4,)).astype(np.int32)
+                   for _ in range(3)]
+        eng = _cont(model, params, paged_kernel=True, block_size=2,
+                    num_blocks=9, max_running=3)
+        ids = [eng.submit(p, 6) for p in prompts]
+        fin = {r.req_id: r for r in eng.run()}
+        assert sum(r.preemptions for r in fin.values()) > 0
+        for p, rid in zip(prompts, ids):
+            np.testing.assert_array_equal(
+                _oracle_tokens(model, params, p, 6),
+                np.asarray(fin[rid].out_tokens))
+
+    def test_paged_gqa_window_softcap(self, gemma2):
+        """gemma2: grouped KV heads, alternating local sliding-window layers,
+        logit softcap — long enough that the window actually truncates."""
+        cfg, model, params = gemma2
+        assert cfg.local_window > 0 and cfg.attn_logit_softcap > 0
+        rng = np.random.RandomState(2)
+        prompt = rng.randint(0, cfg.vocab_size, (30,)).astype(np.int32)
+        n = cfg.local_window + 8 - 30          # decode well past the window
+        ref = _oracle_tokens(model, params, prompt, n)
+        for paged in (True, False):
+            eng = _cont(model, params, paged_kernel=paged, num_blocks=96)
+            rid = eng.submit(prompt, n)
+            fin = {r.req_id: r for r in eng.run()}
+            np.testing.assert_array_equal(
+                ref, np.asarray(fin[rid].out_tokens),
+                err_msg=f"paged_kernel={paged} diverged")
+
+    def test_paged_rejected_for_mla(self):
+        """MLA keeps latent caches the paged kernel can't read: auto-detect
+        must fall back to gather, and forcing the kernel must fail loudly."""
+        cfg = get_smoke_config("deepseek_v2_lite_16b")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        eng = _cont(model, params)
+        assert not eng.paged_kernel
+        with pytest.raises(ValueError, match="unsupported"):
+            _cont(model, params, paged_kernel=True)
+
+
+class TestShapeBuckets:
+    def test_default_buckets_cover_max_running(self):
+        assert default_bucket_sizes(8) == (1, 2, 4, 8)
+        assert default_bucket_sizes(6) == (1, 2, 4, 6)
+        assert default_bucket_sizes(1) == (1,)
+
+    def test_join_exactly_at_bucket_edge(self, smollm):
+        """Third request arrives exactly when the batch crosses the 2->4
+        bucket edge; tokens must stay on the oracle trajectory and every
+        decode signature must come from the bucket set."""
+        cfg, model, params = smollm
+        rng = np.random.RandomState(4)
+        prompts = [rng.randint(0, cfg.vocab_size, (l,)).astype(np.int32)
+                   for l in (5, 5, 6)]
+        eng = _cont(model, params, bucket_sizes=(1, 2, 4))
+        ids = [eng.submit(prompts[0], 6), eng.submit(prompts[1], 6)]
+        eng.step()                              # both running: batch bucket 2
+        assert {s[0] for s in eng._decode_shapes} == {2}
+        ids.append(eng.submit(prompts[2], 4))   # joins: 3 -> pads to bucket 4
+        eng.run()
+        assert {s[0] for s in eng._decode_shapes} <= {2, 4}
+        fin = {r.req_id: r for r in eng.finished}
+        for p, n, rid in zip(prompts, (6, 6, 4), ids):
+            np.testing.assert_array_equal(
+                _oracle_tokens(model, params, p, n),
+                np.asarray(fin[rid].out_tokens))
+
+    @pytest.mark.parametrize("paged", [True, False])
+    def test_recompile_guard_staggered_trace(self, smollm, paged):
+        """Regression guard: a mixed-length staggered trace (the envelope
+        both grows and shrinks) must trigger at most
+        len(batch buckets) x len(block buckets) decode compilations."""
+        cfg, model, params = smollm
+        rng = np.random.RandomState(5)
+        lens = [3, 11, 6, 14, 4, 9]
+        news = [6, 4, 8, 3, 7, 5]
+        prompts = [rng.randint(0, cfg.vocab_size, (l,)).astype(np.int32)
+                   for l in lens]
+        eng = _cont(model, params, paged_kernel=paged)
+        for (p, n) in zip(prompts, news):
+            eng.submit(p, n)
+            eng.step()
+        eng.run()
+        m = eng.metrics()
+        # every request < 32 tokens -> <= 8 blocks -> pow2 buckets {1,2,4,8}
+        n_block_buckets = 4
+        n_shape_buckets = len(eng.bucket_sizes) * n_block_buckets
+        assert m["decode_steps"] >= 10
+        assert m["decode_compiles"] <= n_shape_buckets, m
+        assert m["decode_compiles"] <= m["decode_steps"] // 2, \
+            "bucketing should compile far less often than it steps"
+        assert m["decode_shapes"] <= n_shape_buckets
