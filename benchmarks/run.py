@@ -362,6 +362,46 @@ def bench_serving():
          f"{mp['decode_tok_per_s'] / max(mg['decode_tok_per_s'], 1e-9):.3f}",
          "acceptance: >= 1.0")
 
+    # prefix caching: system-prompt-heavy traffic (one long shared prefix,
+    # short unique tails) served twice per variant — the first pass warms the
+    # jit caches (and, with caching on, the block registry), the second is
+    # the measured steady state, so the TTFT column compares prefix-hit
+    # prefills against cold full-prompt prefills rather than compile noise
+    pre_req = 10 if SMOKE else 14
+    ptrace = synthetic_trace(pre_req, cfg.vocab_size, min_prompt=2,
+                             max_prompt=6, shared_prefix=96, max_new=12,
+                             arrival_every=2, seed=7)
+
+    def run_prefix(name, on):
+        eng = ContinuousEngine(model, params, compute_dtype=jnp.float32,
+                               cache_dtype=jnp.float32, block_size=8,
+                               num_blocks=160, max_running=4, prefix_cache=on)
+        serve_trace(eng, ptrace)
+        # best-of-N on mean TTFT (same spirit as _t's min-of-3): a single
+        # pass is noise-dominated on a shared CPU
+        m = None
+        for _ in range(2 if SMOKE else 3):
+            eng.reset_metrics()
+            cur = serve_trace(eng, ptrace)
+            if m is None or cur["mean_ttft_s"] < m["mean_ttft_s"]:
+                m = cur
+        _row(f"serve/{name}_mean_ttft_s", f"{m['mean_ttft_s']:.4f}",
+             "steady-state (warm jit, best of repeats)")
+        _row(f"serve/{name}_cache_hit_rate", f"{m['prefix_hit_rate']:.3f}")
+        _row(f"serve/{name}_prefill_compiles", m["prefill_compiles"],
+             f"{m['prefill_batches']} batched prefill calls, "
+             f"{m['prefill_shapes']} length buckets")
+        return m
+
+    mon = run_prefix("prefix_on", True)
+    moff = run_prefix("prefix_off", False)
+    _row("serve/prefix_cache_hit_rate", f"{mon['prefix_hit_rate']:.3f}",
+         "acceptance: > 0")
+    _row("serve/prefix_ttft_speedup",
+         f"{moff['mean_ttft_s'] / max(mon['mean_ttft_s'], 1e-9):.3f}",
+         "prefix-hit vs cold TTFT on the shared-prefix trace; "
+         "acceptance: > 1.0")
+
 
 # ---------------------------------------------------------------------------
 # Roofline summary from the dry-run artifacts

@@ -31,16 +31,21 @@ from repro.serve import ContinuousEngine, ServeEngine
 def synthetic_trace(n_requests: int, vocab_size: int, *, seed: int = 0,
                     min_prompt: int = 4, max_prompt: int = 24,
                     min_new: int = 4, max_new: int = 16,
-                    arrival_every: int = 2):
+                    arrival_every: int = 2, shared_prefix: int = 0):
     """Mixed-length request trace with staggered arrivals.
 
-    Returns a list of (arrival_step, prompt (T,), max_new_tokens)."""
+    ``shared_prefix`` prepends one common random token prefix of that length
+    to every prompt — the system-prompt-heavy traffic shape prefix caching
+    targets. Returns a list of (arrival_step, prompt (T,), max_new_tokens)."""
     rng = np.random.RandomState(seed)
+    common = rng.randint(0, vocab_size, (shared_prefix,)).astype(np.int32)
     trace = []
     for i in range(n_requests):
         t0 = int(rng.randint(min_prompt, max_prompt + 1))
         nn = int(rng.randint(min_new, max_new + 1))
         prompt = rng.randint(0, vocab_size, (t0,)).astype(np.int32)
+        if shared_prefix:
+            prompt = np.concatenate([common, prompt])
         trace.append((i * arrival_every, prompt, nn))
     return trace
 
@@ -80,8 +85,10 @@ def run_continuous(args, cfg, model, params, pipe):
     ratio = args.compress_ratio if args.compress_ratio > 0 else 0.6
     cparams = _compressed_params(cfg, model, params, pipe, ratio)
     trace = synthetic_trace(args.requests, cfg.vocab_size, seed=args.seed,
-                            max_new=args.new_tokens)
+                            max_new=args.new_tokens,
+                            shared_prefix=args.shared_prefix)
     paged = {"auto": None, "on": True, "off": False}[args.paged_kernel]
+    prefix = {"auto": None, "on": True, "off": False}[args.prefix_cache]
     for name, p in (("dense", params), ("coala", cparams)):
         eng = ContinuousEngine(model, p, compute_dtype=jnp.float32,
                                cache_dtype=jnp.float32,
@@ -89,7 +96,10 @@ def run_continuous(args, cfg, model, params, pipe):
                                num_blocks=args.num_blocks,
                                max_running=args.max_running,
                                paged_kernel=paged,
-                               bucket_sizes=_parse_buckets(args.bucket_sizes))
+                               bucket_sizes=_parse_buckets(args.bucket_sizes),
+                               prefix_cache=prefix,
+                               prefill_bucket_sizes=_parse_buckets(
+                                   args.prefill_bucket_sizes))
         m = serve_trace(eng, trace, temperature=args.temperature)
         path = "paged-kernel" if eng.paged_kernel else "gather"
         print(f"[{name}] per-request TTFT (s):")
@@ -104,6 +114,15 @@ def run_continuous(args, cfg, model, params, pipe):
               f"mean TTFT {m['mean_ttft_s']:.3f}s, "
               f"{m['decode_compiles']} decode compiles over "
               f"{m['decode_steps']} steps ({m['decode_shapes']} shape buckets)")
+        print(f"[{name}] prefill: {m['prefill_compiles']} compiles / "
+              f"{m['prefill_batches']} batched calls "
+              f"({m['prefill_shapes']} length buckets); prefix cache "
+              f"{'on' if eng.prefix_cache else 'off'}: "
+              f"hit rate {m['prefix_hit_rate']:.2f} "
+              f"({m['prefix_hit_tokens']} tokens), "
+              f"{m['cached_blocks']} cached blocks, "
+              f"{m['cow_copies']} COW copies, "
+              f"{m['prefix_evictions']} evictions")
 
 
 def run_fixed(args, cfg, model, params, pipe):
@@ -144,6 +163,17 @@ def main():
                     help="comma-separated decode batch buckets, e.g. "
                          "'1,2,4,8' (default: powers of two up to "
                          "--max-running)")
+    ap.add_argument("--prefix-cache", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="block-granular prompt-prefix reuse over the paged "
+                         "cache (auto: on for pure-attention LMs)")
+    ap.add_argument("--prefill-bucket-sizes", default="",
+                    help="comma-separated prompt-suffix length buckets for "
+                         "batched prefill, e.g. '8,16,32' (default: powers "
+                         "of two, floor 8)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a common prefix of this many tokens to "
+                         "every trace prompt (prefix-cache-heavy traffic)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

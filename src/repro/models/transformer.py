@@ -408,6 +408,31 @@ class LM:
         h, _, cache = self._backbone(params, x, ctx=ctx, cache=cache, pos=None)
         return self._logits(params, h[:, -1:]), cache
 
+    def prefill_chunk(self, params, tokens, cache, pos, lens, *,
+                      ctx: ParallelCtx = CPU_CTX, compute_dtype=jnp.bfloat16):
+        """Prefill a batch of suffix chunks at per-request cache offsets.
+
+        tokens: (B, L) int32 — each row is a request's un-cached prompt
+        suffix, right-padded to the shared length bucket ``L``; pos: (B,)
+        int32 start offsets (the length of the row's cached prefix); lens:
+        (B,) int32 valid token counts per row. Rides the same vector-``pos``
+        attention path as ``decode_step`` (row-wise cache writes at
+        ``pos[i] + j``, per-row causal masks over the whole cache), so a row
+        attends to its cached prefix KV without recomputing it. Returns the
+        logits at each row's last *valid* token, (B, vocab).
+
+        Padded tail tokens (``j >= lens[i]``) write garbage K/V past the
+        row's real length; the causal mask hides those positions until a
+        later decode overwrites them, and ``BlockPool.scatter_suffix`` never
+        writes blocks past the suffix back to the pool.
+        """
+        x = self._embed(params, tokens).astype(compute_dtype)
+        h, _, cache = self._backbone(params, x, ctx=ctx, cache=cache, pos=pos)
+        idx = jnp.maximum(lens - 1, 0)
+        h_last = jnp.take_along_axis(
+            h, idx[:, None, None].astype(jnp.int32), axis=1)
+        return self._logits(params, h_last)[:, 0], cache
+
     def decode_step(self, params, tokens, cache, pos, *,
                     ctx: ParallelCtx = CPU_CTX, compute_dtype=jnp.bfloat16,
                     block_tables=None):

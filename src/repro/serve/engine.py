@@ -6,13 +6,24 @@ fallback/oracle path.
 
 ``ContinuousEngine`` — request-level continuous batching over a paged KV
 cache. ``submit()`` enqueues a request; each ``step()`` admits whatever fits
-(scheduler + block pool), prefills joiners one at a time into pool blocks,
-then runs ONE decode step over the whole running set at per-request
-positions (the models' vector-``pos`` decode path), so requests of different
-lengths interleave freely and finished requests free their blocks
-immediately. Per-request sampling params (greedy + temperature) are applied
-row-wise; sampling keys are folded per (seed, output index) so a preempted
-request resumes on the same trajectory.
+(scheduler + block pool), prefills joiners into pool blocks, then runs ONE
+decode step over the whole running set at per-request positions (the
+models' vector-``pos`` decode path), so requests of different lengths
+interleave freely and finished requests free their blocks immediately.
+Per-request sampling params (greedy + temperature) are applied row-wise;
+sampling keys are folded per (seed, output index) so a preempted request
+resumes on the same trajectory.
+
+Prefill path (pure-attention LMs): admission looks up the longest cached
+block-aligned prefix in the pool's prefix registry (``prefix_cache``,
+auto-on) and only the *suffix* is computed; joiners whose suffixes land in
+the same length bucket (``prefill_bucket_sizes``, default powers of two
+with floor 8) prefill together in ONE jitted ``LM.prefill_chunk`` call at
+per-row cache offsets — so prefill compiles per (batch, length, blocks)
+bucket instead of per prompt length (``metrics()["prefill_compiles"]``).
+``fork()`` clones a running request copy-on-write for best-of-n sampling.
+Models with extras (whisper frames, VLM vision prefixes) and
+recurrent/hybrid archs keep the legacy per-request prefill.
 
 Decode read path: by default (``paged_kernel=True`` where the model
 supports it) each step passes the pool's page stores *directly* into the
@@ -45,7 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.common import CPU_CTX, ParallelCtx
-from repro.models.transformer import LM
+from repro.models.transformer import LM, period_specs
 from repro.serve.paged_cache import BlockPool
 from repro.serve.scheduler import Request, Scheduler
 
@@ -137,7 +148,9 @@ class ContinuousEngine:
                  max_running: int = 8,
                  paged_kernel: Optional[bool] = None,
                  paged_attn_impl: Optional[str] = None,
-                 bucket_sizes: Optional[Sequence[int]] = None):
+                 bucket_sizes: Optional[Sequence[int]] = None,
+                 prefix_cache: Optional[bool] = None,
+                 prefill_bucket_sizes: Optional[Sequence[int]] = None):
         self.model = model
         self.params = params
         if paged_attn_impl is not None:
@@ -146,9 +159,23 @@ class ContinuousEngine:
         self.compute_dtype = compute_dtype
         self.cache_dtype = cache_dtype
         self.block_size = block_size
+        # chunked (position-offset) prefill rides the vector-pos attention
+        # path, so it needs a pure-attention LM: recurrent/hybrid layers
+        # (mamba, xlstm) would need state snapshots at block boundaries
+        chunk_ok = isinstance(model, LM)
+        if chunk_ok:
+            pre, per, _ = period_specs(model.cfg)
+            chunk_ok = all(s.kind == "attn" for s in pre + per)
+        self._chunk_ok = chunk_ok
+        self.prefix_cache = chunk_ok if prefix_cache is None else prefix_cache
+        if self.prefix_cache and not chunk_ok:
+            raise ValueError(
+                "prefix caching needs chunked suffix prefill, which this "
+                "model does not support (recurrent/hybrid/enc-dec layers)")
         self.pool = BlockPool(model, num_blocks=num_blocks,
                               block_size=block_size,
-                              max_requests=max_running, dtype=cache_dtype)
+                              max_requests=max_running, dtype=cache_dtype,
+                              prefix_cache=self.prefix_cache)
         self.scheduler = Scheduler(self.pool, max_running=max_running)
         # the paged read path needs attention layers that understand page
         # stores: decoder-only/VLM/hybrid LMs with plain GQA K/V caches
@@ -161,13 +188,19 @@ class ContinuousEngine:
         buckets = set(bucket_sizes or default_bucket_sizes(max_running))
         buckets.add(max_running)        # largest bucket must cover the batch
         self.bucket_sizes = tuple(sorted(buckets))
+        self.prefill_bucket_sizes = tuple(sorted(prefill_bucket_sizes)) \
+            if prefill_bucket_sizes else ()
         self.finished: List[Request] = []
         self._next_id = 0
         self._start_time: Optional[float] = None
         self._decode_shapes: set = set()
+        self._prefill_shapes: set = set()
         self._decode_time = 0.0              # steady-state (post-compile) ...
         self._decode_tokens = 0              # ... decode wall time / tokens
         self._decode_steps = 0
+        self._prefill_batches = 0
+        self._prompt_tokens = 0              # prefix-cache hit-rate counters
+        self._prefix_hit_tokens = 0
         m, cd = model, compute_dtype
         self._prefill = jax.jit(
             lambda p, tk, c, **kw: m.prefill(p, tk, c, ctx=ctx,
@@ -181,6 +214,16 @@ class ContinuousEngine:
             lambda p, tk, c, pos, bt: m.decode_step(
                 p, tk, c, pos, ctx=ctx, compute_dtype=cd, block_tables=bt),
             donate_argnums=(2,))
+        if chunk_ok:
+            # the gathered suffix-prefill cache is the largest transient in
+            # the serving path; donate it so XLA updates it in place instead
+            # of holding input + output copies alive
+            self._prefill_chunk = jax.jit(
+                lambda p, tk, c, pos, lens: m.prefill_chunk(
+                    p, tk, c, pos, lens, ctx=ctx, compute_dtype=cd),
+                donate_argnums=(2,))
+        else:
+            self._prefill_chunk = None
         self._sample = jax.jit(_sample_rows)
 
     # ------------------------------------------------------------------ API
@@ -199,7 +242,8 @@ class ContinuousEngine:
             vis = extras["vision_embeds"].shape[1]
         req = Request(req_id=self._next_id, prompt=prompt,
                       max_new_tokens=max_new_tokens, temperature=temperature,
-                      seed=seed, eos_id=eos_id, extras=extras, vis_offset=vis)
+                      seed=seed, eos_id=eos_id, extras=extras, vis_offset=vis,
+                      cacheable=self._chunk_ok and not extras and vis == 0)
         need = self.pool.blocks_for(req.cache_budget())
         if need > self.pool.usable_blocks:
             raise ValueError(
@@ -217,11 +261,28 @@ class ContinuousEngine:
         return self.scheduler.has_work()
 
     def step(self) -> List[Request]:
-        """Admit + prefill joiners, run one decode step over the running
-        batch; returns the requests that finished during this step."""
+        """Admit + prefill joiners (same-length-bucket suffixes batched into
+        one jitted call), run one decode step over the running batch; returns
+        the requests that finished during this step."""
         done: List[Request] = []
-        for req in self.scheduler.admit():
-            self._prefill_request(req)
+        admitted = self.scheduler.admit()
+        groups: Dict[int, list] = {}
+        for req in admitted:
+            if not req.cacheable:
+                self._prefill_request(req)            # extras / hybrid archs
+                continue
+            # allocate (and thereby look up the cached prefix) once; the
+            # suffix length both picks the batch group and feeds the prefill
+            toks = req.prefill_tokens()
+            cached = self.pool.alloc(req.req_id, len(toks), tokens=toks)
+            self._prompt_tokens += len(toks)
+            self._prefix_hit_tokens += cached
+            groups.setdefault(
+                self._bucket_prefill(len(toks) - cached),
+                []).append((req, toks, cached))
+        for _, group in sorted(groups.items()):
+            self._prefill_batch(group)
+        for req in admitted:
             if req.done:
                 self.scheduler.evict(req)
                 self.finished.append(req)
@@ -230,6 +291,38 @@ class ContinuousEngine:
         if running:
             done.extend(self._decode_step(running))
         return done
+
+    def fork(self, req_id: int, *, temperature: Optional[float] = None,
+             seed: Optional[int] = None) -> int:
+        """Clone a running request mid-generation (best-of-n sampling): the
+        child shares the parent's cache blocks copy-on-write — the first
+        divergent token write into the shared tail block copies just that
+        block. Returns the child's request id."""
+        parent = next((r for r in self.scheduler.running
+                       if r.req_id == req_id), None)
+        if parent is None:
+            raise ValueError(f"request {req_id} is not running")
+        if len(self.scheduler.running) >= self.scheduler.max_running:
+            raise ValueError("running set full; cannot fork")
+        child = Request(
+            req_id=self._next_id, prompt=parent.prompt.copy(),
+            max_new_tokens=parent.max_new_tokens,
+            temperature=parent.temperature if temperature is None
+            else temperature,
+            seed=parent.seed if seed is None else seed,
+            eos_id=parent.eos_id, extras=parent.extras,
+            vis_offset=parent.vis_offset, cacheable=parent.cacheable)
+        self._next_id += 1
+        child.out_tokens = list(parent.out_tokens)
+        child.cache_len = parent.cache_len
+        # the child continues the parent's lifecycle: keep both timestamps
+        # so its TTFT equals the parent's (arrival defaulted to the fork
+        # instant, which would make first_token - arrival negative)
+        child.arrival_time = parent.arrival_time
+        child.first_token_time = parent.first_token_time
+        self.pool.fork(parent.req_id, child.req_id)
+        self.scheduler.adopt(child)
+        return child.req_id
 
     def stream(self) -> Iterator[Request]:
         """Drive steps until the queue drains, yielding finished requests."""
@@ -271,6 +364,33 @@ class ContinuousEngine:
         except AttributeError:   # older jax: fall back to signatures seen
             return len(self._decode_shapes)
 
+    def prefill_compile_count(self) -> int:
+        """Entries in the prefill jit caches: length-bucketed suffix batching
+        keeps this ≤ the number of (batch, length, blocks) prefill buckets
+        instead of one compile per distinct prompt length."""
+        try:
+            n = int(self._prefill._cache_size())
+            if self._prefill_chunk is not None:
+                n += int(self._prefill_chunk._cache_size())
+            return n
+        except AttributeError:   # older jax: fall back to signatures seen
+            return len(self._prefill_shapes)
+
+    def reset_metrics(self) -> None:
+        """Zero the per-trace counters (finished list, timers, hit-rate
+        accounting) while keeping jit caches and the prefix registry warm —
+        lets benchmarks measure steady-state serving without compile noise."""
+        self.finished = []
+        self._start_time = None
+        self._decode_time = 0.0
+        self._decode_tokens = 0
+        self._decode_steps = 0
+        self._prefill_batches = 0
+        self._prompt_tokens = 0
+        self._prefix_hit_tokens = 0
+        for k in self.pool.stats:
+            self.pool.stats[k] = 0
+
     def metrics(self) -> Dict[str, float]:
         """Aggregate serving metrics over finished requests."""
         fin = self.finished
@@ -283,6 +403,15 @@ class ContinuousEngine:
             "decode_tok_per_s": (self._decode_tokens /
                                  max(self._decode_time, 1e-9)
                                  if self._decode_tokens else 0.0),
+            "prefill_compiles": self.prefill_compile_count(),
+            "prefill_shapes": len(self._prefill_shapes),
+            "prefill_batches": self._prefill_batches,
+            "prefix_hit_rate": (self._prefix_hit_tokens /
+                                max(self._prompt_tokens, 1)),
+            "prefix_hit_tokens": self._prefix_hit_tokens,
+            "cached_blocks": self.pool.cached_blocks,
+            "cow_copies": self.pool.stats["cow_copies"],
+            "prefix_evictions": self.pool.stats["evictions"],
         }
         if not fin:
             return {"requests": 0, "requests_per_sec": 0.0, "new_tokens": 0,
@@ -309,6 +438,15 @@ class ContinuousEngine:
             if b >= n:
                 return b
         return n
+
+    def _bucket_prefill(self, n: int) -> int:
+        """Suffix-length bucket: explicit sizes if given, else powers of two
+        with a floor of 8 (padding a handful of tokens is cheaper than a
+        fresh XLA compile per prompt length)."""
+        for b in self.prefill_bucket_sizes:
+            if b >= n:
+                return b
+        return max(_pow2_at_least(n), 8)
 
     def _sample_tokens(self, logits, reqs, pad_to: int = 0) -> np.ndarray:
         """Row-wise sampling; rows past ``len(reqs)`` are bucket padding
@@ -338,6 +476,42 @@ class ContinuousEngine:
         req.out_tokens.append(tok)
         if req.first_token_time is None:
             req.first_token_time = time.perf_counter()
+
+    def _prefill_batch(self, group) -> None:
+        """One jitted prefill over a same-bucket group of (request, tokens,
+        cached-prefix-len) joiners, already allocated by ``step()``: each row
+        prefills only the suffix its cached prefix does not cover, at its own
+        cache offset, padded to the (batch, suffix-len, blocks) bucket."""
+        reqs = [r for r, _, _ in group]
+        ids = [r.req_id for r in reqs]
+        starts = [cached for _, _, cached in group]
+        suffixes = [np.asarray(toks[cached:], np.int32)
+                    for _, toks, cached in group]
+        lens = [len(s) for s in suffixes]
+        l_pad = self._bucket_prefill(max(lens))
+        b_pad = self._bucket_batch(len(group))
+        nb_pad = _pow2_at_least(max(self.pool.blocks_for(s + l_pad)
+                                    for s in starts))
+        self._prefill_shapes.add((b_pad, l_pad, nb_pad))
+        tok = np.zeros((b_pad, l_pad), np.int32)
+        for i, s in enumerate(suffixes):
+            tok[i, :len(s)] = s
+        pos = jnp.asarray(starts + [0] * (b_pad - len(group)), jnp.int32)
+        ln = jnp.asarray(lens + [1] * (b_pad - len(group)), jnp.int32)
+        cache = self.pool.gather_batch(ids, rows=b_pad, blocks=nb_pad)
+        logits, cache = self._prefill_chunk(self.params, jnp.asarray(tok),
+                                            cache, pos, ln)
+        self.pool.scatter_suffix(ids, cache, starts, lens, rows=b_pad,
+                                 blocks=nb_pad)
+        self._prefill_batches += 1
+        nxt = self._sample_tokens(logits, reqs, pad_to=b_pad)
+        now = time.perf_counter()
+        for r, start, ln_i, t in zip(reqs, starts, lens, nxt):
+            r.cache_len = start + ln_i
+            r.out_tokens.append(int(t))
+            if r.first_token_time is None:
+                r.first_token_time = now
+            self.pool.commit(r.req_id, r.prefill_tokens()[:r.cache_len])
 
     def _decode_step(self, running: List[Request]) -> List[Request]:
         # reserve the next position for everyone, preempting the youngest
@@ -389,6 +563,11 @@ class ContinuousEngine:
         done = []
         for r, t in zip(running, nxt):
             r.out_tokens.append(int(t))
+            if (self.prefix_cache and r.cacheable
+                    and r.cache_len % self.block_size == 0):
+                # a generated block just filled: register it so identical
+                # traffic (and this request, if preempted) can reuse it
+                self.pool.commit(r.req_id, r.prefill_tokens()[:r.cache_len])
             if r.done:
                 self.scheduler.evict(r)
                 self.finished.append(r)

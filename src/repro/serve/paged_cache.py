@@ -30,15 +30,34 @@ Two trash locations absorb batch padding (shape buckets pad ``B`` and
 page (table padding points at it), and slot ``max_requests`` is the
 reserved trash state slot — padded rows gather/scatter garbage nowhere that
 matters, and the per-request causal masks hide whatever they read.
+
+**Prefix caching** (``prefix_cache=True``): blocks are refcounted and a
+hash-indexed registry maps *full* blocks of committed tokens to their pages,
+so a new request whose prompt shares a block-aligned prefix with anything
+served before reuses those pages instead of recomputing them
+(``alloc(..., tokens=)`` returns how many prefix tokens were cached).
+Registry keys are interned ``(parent_prefix, block_tokens)`` chains — two
+prefixes collide only if they are token-for-token identical, so lookups are
+always token-exact. When a request frees, registered blocks with no
+remaining references park in an LRU of *cached* blocks instead of the free
+list; allocation evicts from that LRU only under pool pressure. Shared
+blocks are never written: writes target the block holding the request's
+next position, which ``extend`` guarantees is exclusive by copy-on-write
+forking (``fork`` shares a whole table, e.g. best-of-n; the first write to
+the shared tail block copies it).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+_ROOT = -1                      # parent id of a prefix chain's first block
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,17 +133,31 @@ class BlockPool:
     """
 
     def __init__(self, model, *, num_blocks: int, block_size: int,
-                 max_requests: int, dtype=jnp.bfloat16):
+                 max_requests: int, dtype=jnp.bfloat16,
+                 prefix_cache: bool = False):
         assert num_blocks >= 2 and block_size >= 1
         self.block_size = block_size
         self.num_blocks = num_blocks
         self.max_requests = max_requests
+        self.prefix_cache = prefix_cache
         self.layout = CacheLayout.probe(model, dtype=dtype,
                                         probe_len=max(8, block_size))
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))  # 0 = trash
         self._tables: Dict[int, List[int]] = {}
         self._slots: Dict[int, int] = {}
         self._free_slots: List[int] = list(range(max_requests - 1, -1, -1))
+        # --- prefix registry (all empty / inert when prefix_cache=False) ---
+        self._ref: Dict[int, int] = {}          # live block -> refcount (>= 1)
+        self._intern: Dict[Tuple[int, Tuple[int, ...]], int] = {}
+        self._pid_parent: Dict[int, int] = {}   # prefix id -> parent id
+        self._next_pid = 0                      # ids never reused (sweeps)
+        self._intern_sweep_at = max(8 * num_blocks, 256)
+        self._registry: Dict[int, int] = {}     # prefix id -> block holding it
+        self._block_pid: Dict[int, int] = {}    # inverse of _registry
+        self._lru: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()           # cached refcount-0 blocks
+        self._chain: Dict[int, List[int]] = {}  # req -> prefix ids committed
+        self.stats: Dict[str, int] = {"cow_copies": 0, "evictions": 0}
         # pooled token pages + per-request state store (last slot = trash)
         self.token_store = [
             jnp.zeros(_token_store_shape(sp, num_blocks, block_size), dt)
@@ -145,6 +178,16 @@ class BlockPool:
         return len(self._free)
 
     @property
+    def cached_blocks(self) -> int:
+        """Registered blocks no live request references (evictable)."""
+        return len(self._lru)
+
+    @property
+    def available_blocks(self) -> int:
+        """Blocks an allocation may claim: truly free + LRU-evictable."""
+        return len(self._free) + len(self._lru)
+
+    @property
     def free_slots(self) -> int:
         return len(self._free_slots)
 
@@ -152,36 +195,214 @@ class BlockPool:
     def trash_slot(self) -> int:
         return self.max_requests
 
+    def ref_count(self, block: int) -> int:
+        return self._ref.get(block, 0)
+
+    def cached_block_ids(self) -> Tuple[int, ...]:
+        return tuple(self._lru)
+
+    def free_block_ids(self) -> Tuple[int, ...]:
+        return tuple(self._free)
+
     def blocks_for(self, n_tokens: int) -> int:
         return -(-max(n_tokens, 1) // self.block_size)
 
     def can_alloc(self, n_tokens: int) -> bool:
-        return (self.blocks_for(n_tokens) <= len(self._free)
+        return (self.blocks_for(n_tokens) <= self.available_blocks
                 and len(self._free_slots) > 0)
 
-    def alloc(self, req_id: int, n_tokens: int) -> None:
-        """Reserve blocks covering ``n_tokens`` and a state slot."""
+    # ------------------------------------------------------- block lifecycle
+    def _incref(self, block: int) -> None:
+        if self._ref.get(block, 0) == 0:
+            self._lru.pop(block, None)       # cached -> live again
+        self._ref[block] = self._ref.get(block, 0) + 1
+
+    def _decref(self, block: int) -> None:
+        n = self._ref[block] - 1
+        assert n >= 0, f"refcount underflow on block {block}"
+        if n:
+            self._ref[block] = n
+            return
+        del self._ref[block]
+        if block in self._block_pid:         # registered: park in the LRU
+            self._lru[block] = None
+        else:
+            self._free.append(block)
+
+    def _deregister(self, block: int) -> None:
+        pid = self._block_pid.pop(block)
+        del self._registry[pid]
+
+    def _take_block(self) -> int:
+        """Claim a block: the free list first, then LRU-evict a cached one."""
+        if self._free:
+            return self._free.pop()
+        if self._lru:
+            block, _ = self._lru.popitem(last=False)     # least recently freed
+            self._deregister(block)
+            self.stats["evictions"] += 1
+            return block
+        raise MemoryError("block pool exhausted")
+
+    # ------------------------------------------------------- prefix registry
+    def _lookup(self, tokens) -> Tuple[List[int], List[int]]:
+        """Longest chain of registered full blocks matching ``tokens``
+        exactly, capped so at least one token is left to prefill."""
+        bs = self.block_size
+        max_blocks = (len(tokens) - 1) // bs
+        parent, blocks, pids = _ROOT, [], []
+        for i in range(max_blocks):
+            key = (parent, tuple(int(t) for t in tokens[i * bs:(i + 1) * bs]))
+            pid = self._intern.get(key)
+            if pid is None or pid not in self._registry:
+                break
+            blocks.append(self._registry[pid])
+            pids.append(pid)
+            parent = pid
+        return blocks, pids
+
+    def _sweep_intern(self) -> None:
+        """Bound the intern table: drop prefix ids that are neither in a
+        live request's chain, nor registered, nor an ancestor of either
+        (ancestors keep evicted-then-recommitted chains revivable under
+        their original ids). Without this the table would grow by one entry
+        per distinct block ever served."""
+        keep = set(self._registry)
+        for chain in self._chain.values():
+            keep.update(chain)
+        for pid in list(keep):
+            p = self._pid_parent.get(pid, _ROOT)
+            while p != _ROOT and p not in keep:
+                keep.add(p)
+                p = self._pid_parent.get(p, _ROOT)
+        for key, pid in list(self._intern.items()):
+            if pid not in keep:
+                del self._intern[key]
+                self._pid_parent.pop(pid, None)
+        # re-arm so a legitimately large working set doesn't sweep per commit
+        self._intern_sweep_at = max(2 * len(self._intern),
+                                    8 * self.num_blocks, 256)
+
+    def probe_prefix(self, tokens) -> int:
+        """Cached-prefix tokens a lookup would hit right now (no acquire)."""
+        if not self.prefix_cache or tokens is None:
+            return 0
+        return len(self._lookup(tokens)[0]) * self.block_size
+
+    def commit(self, req_id: int, tokens) -> None:
+        """Register the request's newly completed full blocks of ``tokens``
+        (its committed prompt+generated stream) in the prefix registry."""
+        if not self.prefix_cache or req_id not in self._tables:
+            return
+        bs = self.block_size
+        table = self._tables[req_id]
+        chain = self._chain.setdefault(req_id, [])
+        n_full = min(len(tokens) // bs, len(table))
+        while len(chain) < n_full:
+            i = len(chain)
+            parent = chain[-1] if chain else _ROOT
+            key = (parent, tuple(int(t) for t in tokens[i * bs:(i + 1) * bs]))
+            pid = self._intern.get(key)
+            if pid is None:
+                pid = self._next_pid
+                self._next_pid += 1
+                self._intern[key] = pid
+                self._pid_parent[pid] = parent
+                if len(self._intern) > self._intern_sweep_at:
+                    self._sweep_intern()
+            chain.append(pid)
+            # first committer wins; duplicates stay unregistered and return
+            # to the free list when their request ends
+            if pid not in self._registry and table[i] not in self._block_pid:
+                self._registry[pid] = table[i]
+                self._block_pid[table[i]] = pid
+
+    def alloc(self, req_id: int, n_tokens: int, tokens=None) -> int:
+        """Reserve blocks covering ``n_tokens`` and a state slot.
+
+        With ``prefix_cache`` and the request's token stream in ``tokens``,
+        the longest registered block-aligned prefix is reused (refcounted)
+        instead of freshly allocated. Returns the number of cached prefix
+        tokens (0 without caching); the caller prefills only the suffix.
+        """
         assert req_id not in self._tables, f"request {req_id} already allocated"
-        need = self.blocks_for(n_tokens)
-        if need > len(self._free) or not self._free_slots:
+        hit_blocks: List[int] = []
+        hit_pids: List[int] = []
+        if self.prefix_cache and tokens is not None and len(tokens) > 1:
+            hit_blocks, hit_pids = self._lookup(tokens)
+        need = self.blocks_for(n_tokens) - len(hit_blocks)
+        assert need >= 0
+        for b in hit_blocks:                 # pin hits before any eviction
+            self._incref(b)
+        if need > self.available_blocks or not self._free_slots:
+            for b in hit_blocks:
+                self._decref(b)
             raise MemoryError(
                 f"pool exhausted: need {need} blocks / 1 slot, have "
-                f"{len(self._free)} blocks / {len(self._free_slots)} slots")
-        blks = [self._free.pop() for _ in range(need)]
+                f"{self.available_blocks} blocks / "
+                f"{len(self._free_slots)} slots")
+        blks = [self._take_block() for _ in range(need)]
         self._zero(blks)
-        self._tables[req_id] = blks
+        for b in blks:
+            self._ref[b] = 1
+        self._tables[req_id] = hit_blocks + blks
         self._slots[req_id] = self._free_slots.pop()
+        self._chain[req_id] = list(hit_pids)
+        return len(hit_blocks) * self.block_size
 
     def extend(self, req_id: int, n_tokens: int) -> None:
-        """Grow the request's table to cover ``n_tokens`` total tokens."""
+        """Grow the request's table to cover ``n_tokens`` total tokens and
+        guarantee the block holding token ``n_tokens - 1`` is exclusively
+        owned (copy-on-write if it is shared with another request)."""
         table = self._tables[req_id]
         need = self.blocks_for(n_tokens) - len(table)
-        if need > len(self._free):
+        if need > self.available_blocks:
             raise MemoryError(f"pool exhausted extending request {req_id}")
         if need > 0:
-            blks = [self._free.pop() for _ in range(need)]
+            blks = [self._take_block() for _ in range(need)]
             self._zero(blks)
+            for b in blks:
+                self._ref[b] = 1
             table.extend(blks)
+        self._ensure_writable(req_id, n_tokens - 1)
+
+    def _ensure_writable(self, req_id: int, pos: int) -> None:
+        """Copy-on-write: the block containing ``pos`` must have refcount 1.
+        Only uncommitted (partial) blocks are ever written, so the registry
+        is never invalidated by a write."""
+        table = self._tables[req_id]
+        i = pos // self.block_size
+        blk = table[i]
+        if self._ref[blk] <= 1:
+            return
+        new = self._take_block()
+        if self.token_store:
+            self.token_store = _copy_block(
+                tuple(self.layout.specs), self.token_store,
+                jnp.int32(blk), jnp.int32(new))
+        self._ref[new] = 1
+        self._decref(blk)
+        table[i] = new
+        self.stats["cow_copies"] += 1
+
+    def fork(self, parent_id: int, child_id: int) -> None:
+        """Share the parent's whole table with ``child_id`` (copy-on-write:
+        the first divergent write mid-block copies that block) and duplicate
+        its recurrent-state slot."""
+        assert child_id not in self._tables
+        if not self._free_slots:
+            raise MemoryError("no free state slot to fork into")
+        table = list(self._tables[parent_id])
+        for b in table:
+            self._incref(b)
+        self._tables[child_id] = table
+        self._slots[child_id] = self._free_slots.pop()
+        self._chain[child_id] = list(self._chain.get(parent_id, []))
+        if self.state_store:
+            self.state_store = _copy_state_slot(
+                tuple(self.layout.specs), self.state_store,
+                jnp.int32(self._slots[parent_id]),
+                jnp.int32(self._slots[child_id]))
 
     def _zero(self, blks: List[int]) -> None:
         # reused blocks must read as zeros, not stale KV from a freed request
@@ -191,8 +412,10 @@ class BlockPool:
                                             jnp.asarray(blks, jnp.int32))
 
     def free(self, req_id: int) -> None:
-        self._free.extend(self._tables.pop(req_id))
+        for b in self._tables.pop(req_id):
+            self._decref(b)
         self._free_slots.append(self._slots.pop(req_id))
+        self._chain.pop(req_id, None)
 
     def table(self, req_id: int) -> List[int]:
         return list(self._tables[req_id])
@@ -277,6 +500,35 @@ class BlockPool:
             self.token_store, self.state_store,
             tuple(jax.tree.leaves(cache)), tables, self.slots(req_ids))
 
+    def scatter_suffix(self, req_ids, cache, starts, lens, *,
+                       rows: Optional[int] = None,
+                       blocks: Optional[int] = None) -> None:
+        """Write back only the blocks each request's suffix prefill touched:
+        row ``i`` scatters blocks covering token range
+        ``[starts[i], starts[i] + lens[i])`` (plus all state leaves).
+
+        Blocks outside that range — shared prefix blocks below it, envelope
+        padding above it — are redirected to the trash page, so a cached
+        prefix another request references is never rewritten. ``rows`` and
+        ``blocks`` pad to the same bucketed (B, nb) envelope the cache was
+        gathered with, keeping the jit signature closed."""
+        tables = np.asarray(self.padded_tables(req_ids, rows=rows,
+                                               blocks=blocks))
+        b, nb = tables.shape
+        lo = np.zeros((b,), np.int64)
+        hi = np.zeros((b,), np.int64)
+        lo[:len(req_ids)] = np.asarray(starts) // self.block_size
+        hi[:len(req_ids)] = [self.blocks_for(s + l) if l else 0
+                             for s, l in zip(starts, lens)]
+        j = np.arange(nb)
+        masked = np.where((j[None, :] >= lo[:, None])
+                          & (j[None, :] < hi[:, None]), tables, 0)
+        self.token_store, self.state_store = _scatter_prefill(
+            tuple(self.layout.specs), self.block_size, nb,
+            self.token_store, self.state_store,
+            tuple(jax.tree.leaves(cache)),
+            jnp.asarray(masked, jnp.int32), self.slots(req_ids, rows=rows))
+
     def scatter_token(self, req_ids, cache, positions, *,
                       rows: Optional[int] = None,
                       blocks: Optional[int] = None) -> None:
@@ -311,6 +563,22 @@ def _zero_blocks(specs, token_store, ids):
     token_specs = [sp for sp in specs if sp.token_axis is not None]
     return [s.at[_ix(sp.blocks_axis, ids)].set(0)
             for sp, s in zip(token_specs, token_store)]
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def _copy_block(specs, token_store, src, dst):
+    """Copy-on-write: duplicate page ``src`` into ``dst`` on every leaf."""
+    token_specs = [sp for sp in specs if sp.token_axis is not None]
+    return [s.at[_ix(sp.blocks_axis, dst)].set(s[_ix(sp.blocks_axis, src)])
+            for sp, s in zip(token_specs, token_store)]
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def _copy_state_slot(specs, state_store, src, dst):
+    """Fork: duplicate the per-request state slot ``src`` into ``dst``."""
+    state_specs = [sp for sp in specs if sp.token_axis is None]
+    return [s.at[_ix(sp.slot_axis, dst)].set(s[_ix(sp.slot_axis, src)])
+            for sp, s in zip(state_specs, state_store)]
 
 
 @functools.partial(jax.jit, static_argnums=(0,))

@@ -34,6 +34,10 @@ class Request:
     eos_id: Optional[int] = None
     extras: Optional[dict] = None            # frames / vision_embeds, (1, ...)
     vis_offset: int = 0                      # vlm: vision-prefix cache positions
+    cacheable: bool = False                  # eligible for prefix caching /
+    #                                          batched suffix prefill (set by
+    #                                          the engine: no extras, text-only
+    #                                          cache positions)
     state: str = WAITING
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     cache_len: int = 0                       # logical positions written to cache
@@ -95,10 +99,13 @@ class Scheduler:
         admit() batch never promises the same blocks twice."""
         admitted = []
         reserved = 0
+        # prefix-cached blocks in the LRU are evictable on demand, so they
+        # count as admissible capacity (a prefix hit needs even less)
+        avail = getattr(self.pool, "available_blocks", self.pool.free_blocks)
         while self.waiting and len(self.running) < self.max_running:
             req = self.waiting[0]
             need = self.pool.blocks_for(req.cache_budget())
-            if (need + reserved > self.pool.free_blocks
+            if (need + reserved > avail
                     or len(admitted) + 1 > self.pool.free_slots):
                 break
             reserved += need
@@ -109,6 +116,15 @@ class Scheduler:
             self.running.append(req)
             admitted.append(req)
         return admitted
+
+    def adopt(self, req: Request) -> None:
+        """Insert an already-provisioned request (a fork) into the running
+        set directly, bypassing the admission queue."""
+        assert len(self.running) < self.max_running, "running set full"
+        req.state = RUNNING
+        req.admit_seq = self._admit_seq
+        self._admit_seq += 1
+        self.running.append(req)
 
     def evict(self, req: Request) -> None:
         """Finished request: free its blocks and leave the running set."""

@@ -1,0 +1,241 @@
+"""Prefix caching over the paged KV cache: parity + recompile guards.
+
+The cached-prefix path must stay token-identical to both oracles (the
+gather-into-contiguous read path and the legacy fixed-batch ``ServeEngine``)
+under shared-prefix traffic: full-block hits, mid-block divergence,
+copy-on-write forks, LRU eviction under pool pressure, and preemption of a
+request whose blocks are shared. Plus: length-bucketed batched suffix
+prefill must keep ``prefill_compiles`` at the number of length buckets, not
+one compile per prompt length.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serve import BlockPool, ContinuousEngine, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = get_smoke_config("smollm_135m")
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _cont(model, params, **kw):
+    kw.setdefault("block_size", 4)
+    kw.setdefault("num_blocks", 64)
+    kw.setdefault("max_running", 4)
+    return ContinuousEngine(model, params, compute_dtype=jnp.float32,
+                            cache_dtype=jnp.float32, **kw)
+
+
+def _oracle_tokens(model, params, prompt, n):
+    leg = ServeEngine(model, params, compute_dtype=jnp.float32,
+                      cache_dtype=jnp.float32)
+    return np.asarray(leg.generate(jnp.asarray(prompt)[None],
+                                   max_new_tokens=n))[0, len(prompt):]
+
+
+def _staggered(eng, prompts, news):
+    ids = []
+    for p, n in zip(prompts, news):
+        ids.append(eng.submit(p, n))
+        eng.step()                          # join mid-decode
+    eng.run()
+    fin = {r.req_id: r for r in eng.finished}
+    return [np.asarray(fin[i].out_tokens) for i in ids]
+
+
+def _shared_prefix_prompts(cfg, rng, *, prefix_len, tails):
+    shared = rng.randint(0, cfg.vocab_size, (prefix_len,)).astype(np.int32)
+    return [np.concatenate(
+        [shared, rng.randint(0, cfg.vocab_size, (t,)).astype(np.int32)])
+        for t in tails]
+
+
+class TestPrefixParity:
+    @pytest.mark.parametrize("paged", [True, False])
+    def test_shared_prefix_full_block_hits(self, smollm, paged):
+        """System-prompt traffic: every request after the first reuses the
+        shared blocks, and all of them stay on the oracle trajectory on both
+        decode read paths."""
+        cfg, model, params = smollm
+        rng = np.random.RandomState(0)
+        prompts = _shared_prefix_prompts(cfg, rng, prefix_len=12,
+                                         tails=(3, 5, 7))
+        prompts.append(rng.randint(0, cfg.vocab_size, (6,)).astype(np.int32))
+        news = [5, 5, 4, 5]
+        eng = _cont(model, params, paged_kernel=paged)
+        assert eng.prefix_cache
+        out = _staggered(eng, prompts, news)
+        for p, n, got in zip(prompts, news, out):
+            np.testing.assert_array_equal(
+                _oracle_tokens(model, params, p, n), got,
+                err_msg=f"paged_kernel={paged} diverged under prefix hits")
+        m = eng.metrics()
+        # 12-token shared prefix = 3 full blocks, reused by requests 2 and 3
+        assert m["prefix_hit_tokens"] >= 2 * 12
+        assert m["prefix_hit_rate"] > 0.3
+
+    def test_mid_block_divergence_hits_only_full_blocks(self, smollm):
+        """A prompt diverging mid-block must reuse exactly the full blocks
+        below the divergence point — never a partial match."""
+        cfg, model, params = smollm
+        rng = np.random.RandomState(1)
+        a = rng.randint(0, cfg.vocab_size, (14,)).astype(np.int32)
+        b = np.concatenate(
+            [a[:10], rng.randint(0, cfg.vocab_size, (4,)).astype(np.int32)])
+        assert not np.array_equal(a[:12], b[:12])
+        eng = _cont(model, params)          # block_size 4
+        out = _staggered(eng, [a, b], [5, 5])
+        # b matches a's blocks 0-1 (tokens 0-7); block 2 diverges at pos 10
+        assert eng.metrics()["prefix_hit_tokens"] == 8
+        for p, got in zip((a, b), out):
+            np.testing.assert_array_equal(
+                _oracle_tokens(model, params, p, 5), got)
+
+    def test_cow_fork_midblock(self, smollm):
+        """Forking a request mid-block shares its table copy-on-write: the
+        first divergent write copies just the tail block, and neither the
+        parent nor a greedy clone leaves the oracle trajectory."""
+        cfg, model, params = smollm
+        rng = np.random.RandomState(2)
+        p = rng.randint(0, cfg.vocab_size, (6,)).astype(np.int32)
+        eng = _cont(model, params)
+        rid = eng.submit(p, 8)
+        eng.step()                 # prefill + 1 decode -> cache_len 7, mid-block
+        sid = eng.fork(rid, seed=99, temperature=1.5)   # diverges
+        gid = eng.fork(rid)                             # greedy clone
+        eng.run()
+        fin = {r.req_id: r for r in eng.finished}
+        ref = _oracle_tokens(model, params, p, 8)
+        np.testing.assert_array_equal(ref, np.asarray(fin[rid].out_tokens),
+                                      err_msg="fork corrupted the parent")
+        np.testing.assert_array_equal(ref, np.asarray(fin[gid].out_tokens),
+                                      err_msg="greedy fork diverged")
+        assert len(fin[sid].out_tokens) == 8
+        # both forks shared the parent's partial tail block -> 2 COW copies
+        assert eng.pool.stats["cow_copies"] >= 2
+
+    def test_eviction_under_pool_pressure(self, smollm):
+        """A pool too small to cache every finished request must LRU-evict
+        cached blocks to serve new traffic — without corrupting anything."""
+        cfg, model, params = smollm
+        rng = np.random.RandomState(3)
+        prompts = [rng.randint(0, cfg.vocab_size, (8,)).astype(np.int32)
+                   for _ in range(5)]
+        eng = _cont(model, params, num_blocks=14, max_running=2)
+        ids = [eng.submit(q, 6) for q in prompts]
+        fin = {r.req_id: r for r in eng.run()}
+        assert eng.pool.stats["evictions"] > 0
+        for q, rid in zip(prompts, ids):
+            np.testing.assert_array_equal(
+                _oracle_tokens(model, params, q, 6),
+                np.asarray(fin[rid].out_tokens))
+        # resubmit the oldest prompt: parity must survive whatever mix of
+        # evicted/cached blocks its lookup now finds
+        rid = eng.submit(prompts[0], 6)
+        fin = {r.req_id: r for r in eng.run()}
+        np.testing.assert_array_equal(
+            _oracle_tokens(model, params, prompts[0], 6),
+            np.asarray(fin[rid].out_tokens))
+
+    def test_preemption_of_prefix_sharing_request(self, smollm):
+        """Pool pressure preempts a request whose blocks are shared with
+        other running requests; the survivors keep decoding on the shared
+        blocks and the victim resumes on the same trajectory (with prefix
+        hits from its own first pass)."""
+        cfg, model, params = smollm
+        rng = np.random.RandomState(4)
+        prompts = _shared_prefix_prompts(cfg, rng, prefix_len=4,
+                                         tails=(2, 2, 2))
+        eng = _cont(model, params, block_size=2, num_blocks=13, max_running=3)
+        ids = []
+        for q in prompts:
+            ids.append(eng.submit(q, 10))
+            eng.step()
+        fin = {r.req_id: r for r in eng.run()}
+        assert sum(r.preemptions for r in fin.values()) > 0
+        assert eng.metrics()["prefix_hit_tokens"] > 0
+        for q, rid in zip(prompts, ids):
+            np.testing.assert_array_equal(
+                _oracle_tokens(model, params, q, 10),
+                np.asarray(fin[rid].out_tokens))
+
+    def test_prefix_cache_off_no_hits(self, smollm):
+        """--prefix-cache off: identical traffic, zero hits, same tokens."""
+        cfg, model, params = smollm
+        rng = np.random.RandomState(5)
+        prompts = _shared_prefix_prompts(cfg, rng, prefix_len=12, tails=(3, 5))
+        eng = _cont(model, params, prefix_cache=False)
+        out = _staggered(eng, prompts, [4, 4])
+        assert eng.metrics()["prefix_hit_tokens"] == 0
+        for p, got in zip(prompts, out):
+            np.testing.assert_array_equal(
+                _oracle_tokens(model, params, p, 4), got)
+
+    def test_pool_lookup_token_exact(self, smollm):
+        """Registry hits are token-exact: a one-token difference inside the
+        first block kills the whole chain."""
+        _, model, _ = smollm
+        pool = BlockPool(model, num_blocks=16, block_size=4, max_requests=4,
+                         dtype=jnp.float32, prefix_cache=True)
+        toks = np.arange(10, dtype=np.int32)
+        assert pool.alloc(1, 10, tokens=toks) == 0      # cold
+        pool.commit(1, toks)
+        same = pool.probe_prefix(toks)
+        assert same == 8                                # 2 full blocks
+        mutated = toks.copy()
+        mutated[2] += 1
+        assert pool.probe_prefix(mutated) == 0
+        mutated = toks.copy()
+        mutated[5] += 1                                 # second block differs
+        assert pool.probe_prefix(mutated) == 4
+        pool.free(1)
+        assert pool.cached_blocks == 2                  # full blocks cached
+        assert pool.probe_prefix(toks) == 8             # survive free
+
+
+class TestPrefillBuckets:
+    def test_prefill_compiles_bounded_by_length_buckets(self, smollm):
+        """Recompile guard: a mixed-length trace (11 distinct prompt
+        lengths) must compile at most one prefill per suffix-length bucket —
+        not one per prompt length."""
+        cfg, model, params = smollm
+        rng = np.random.RandomState(6)
+        lens = [3, 5, 6, 9, 11, 14, 17, 21, 24, 27, 30]
+        prompts = [rng.randint(0, cfg.vocab_size, (l,)).astype(np.int32)
+                   for l in lens]
+        eng = _cont(model, params, num_blocks=256, max_running=4)
+        for p in prompts:
+            eng.submit(p, 3)
+            eng.step()
+        eng.run()
+        m = eng.metrics()
+        n_len_buckets = len({eng._bucket_prefill(l) for l in lens})
+        assert n_len_buckets == 3                       # 8 / 16 / 32
+        assert m["prefill_batches"] >= len(lens)
+        assert m["prefill_compiles"] <= n_len_buckets, m
+        assert m["prefill_shapes"] <= n_len_buckets
+
+    def test_joiners_batched_into_one_prefill(self, smollm):
+        """Same-bucket joiners admitted in one step prefill in ONE jitted
+        call (batch > 1), and still match the oracle."""
+        cfg, model, params = smollm
+        rng = np.random.RandomState(7)
+        prompts = [rng.randint(0, cfg.vocab_size, (l,)).astype(np.int32)
+                   for l in (5, 6, 7)]
+        eng = _cont(model, params)
+        ids = [eng.submit(p, 4) for p in prompts]
+        eng.step()                       # all three admitted together
+        assert eng.metrics()["prefill_batches"] == 1
+        eng.run()
+        fin = {r.req_id: r for r in eng.finished}
+        for p, rid in zip(prompts, ids):
+            np.testing.assert_array_equal(
+                _oracle_tokens(model, params, p, 4),
+                np.asarray(fin[rid].out_tokens))

@@ -59,6 +59,23 @@ def _staggered(eng, prompts, news):
 
 
 class TestPagedParity:
+    def test_paged_vs_gather_vs_oracle_short_trace(self, smollm):
+        """Fast tier: one staggered mixed-length case per read path."""
+        cfg, model, params = smollm
+        rng = np.random.RandomState(0)
+        lens, news = [3, 9], [5, 3]
+        prompts = [rng.randint(0, cfg.vocab_size, (l,)).astype(np.int32)
+                   for l in lens]
+        paged = _staggered(_cont(model, params, paged_kernel=True),
+                           prompts, news)
+        gathered = _staggered(_cont(model, params, paged_kernel=False),
+                              prompts, news)
+        for p, n, a, b in zip(prompts, news, paged, gathered):
+            ref = _oracle_tokens(model, params, p, n)
+            np.testing.assert_array_equal(ref, a, err_msg="paged != oracle")
+            np.testing.assert_array_equal(ref, b, err_msg="gather != oracle")
+
+    @pytest.mark.slow
     def test_paged_vs_gather_vs_oracle_mixed_trace(self, smollm):
         cfg, model, params = smollm
         rng = np.random.RandomState(0)
@@ -104,6 +121,7 @@ class TestPagedParity:
                 _oracle_tokens(model, params, p, 6),
                 np.asarray(fin[rid].out_tokens))
 
+    @pytest.mark.slow
     def test_paged_gqa_window_softcap(self, gemma2):
         """gemma2: grouped KV heads, alternating local sliding-window layers,
         logit softcap — long enough that the window actually truncates."""
@@ -160,7 +178,8 @@ class TestShapeBuckets:
                 _oracle_tokens(model, params, p, n),
                 np.asarray(fin[rid].out_tokens))
 
-    @pytest.mark.parametrize("paged", [True, False])
+    @pytest.mark.parametrize(
+        "paged", [True, pytest.param(False, marks=pytest.mark.slow)])
     def test_recompile_guard_staggered_trace(self, smollm, paged):
         """Regression guard: a mixed-length staggered trace (the envelope
         both grows and shrinks) must trigger at most
