@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels import chunked_prefill as _cp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import gram_accum as _ga
 from repro.kernels import lowrank_linear as _ll
@@ -51,3 +52,22 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
     assert impl == "pallas", f"unknown paged-attention impl: {impl}"
     return _pa.paged_attention(q, k_pages, v_pages, block_tables, lengths,
                                interpret=_interpret(), **kw)
+
+
+def chunked_prefill(q, k_pages, v_pages, block_tables, starts, lens, *,
+                    impl=None, **kw):
+    """Chunked-prefill (batched paged suffix prefill) dispatch.
+
+    Same policy as ``paged_attention``: impl None/"auto" — native Pallas on
+    TPU, ``jax.nn`` reference elsewhere (interpret mode is far too slow for
+    a hot path); "pallas" — force the kernel (native on TPU, interpret
+    elsewhere, used by CI parity tests); "ref" — force the jax.nn fallback.
+    """
+    if impl in (None, "auto"):
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return _cp.chunked_prefill_ref(q, k_pages, v_pages, block_tables,
+                                       starts, lens, **kw)
+    assert impl == "pallas", f"unknown chunked-prefill impl: {impl}"
+    return _cp.chunked_prefill(q, k_pages, v_pages, block_tables, starts,
+                               lens, interpret=_interpret(), **kw)

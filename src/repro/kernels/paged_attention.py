@@ -26,7 +26,10 @@ directly:
 ``interpret=True`` runs the same program as traced JAX ops, so CPU CI
 executes the kernel body bit-for-bit; ``paged_attention_ref`` is the plain
 ``jax.nn`` fallback for backends without Pallas support (and the parity
-oracle in tests).
+oracle in tests). ``kernels/chunked_prefill.py`` is this kernel's
+prefill-shaped sibling (batched suffix prefill over the same pages);
+docs/kernels.md documents both grids and the SMEM prefetch layout, and
+docs/serving.md the page/block/bucket vocabulary.
 """
 from __future__ import annotations
 

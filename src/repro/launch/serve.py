@@ -87,8 +87,10 @@ def run_continuous(args, cfg, model, params, pipe):
     trace = synthetic_trace(args.requests, cfg.vocab_size, seed=args.seed,
                             max_new=args.new_tokens,
                             shared_prefix=args.shared_prefix)
-    paged = {"auto": None, "on": True, "off": False}[args.paged_kernel]
-    prefix = {"auto": None, "on": True, "off": False}[args.prefix_cache]
+    tristate = {"auto": None, "on": True, "off": False}
+    paged = tristate[args.paged_kernel]
+    prefix = tristate[args.prefix_cache]
+    prefill = tristate[args.prefill_kernel]
     for name, p in (("dense", params), ("coala", cparams)):
         eng = ContinuousEngine(model, p, compute_dtype=jnp.float32,
                                cache_dtype=jnp.float32,
@@ -96,6 +98,7 @@ def run_continuous(args, cfg, model, params, pipe):
                                num_blocks=args.num_blocks,
                                max_running=args.max_running,
                                paged_kernel=paged,
+                               prefill_kernel=prefill,
                                bucket_sizes=_parse_buckets(args.bucket_sizes),
                                prefix_cache=prefix,
                                prefill_bucket_sizes=_parse_buckets(
@@ -114,7 +117,10 @@ def run_continuous(args, cfg, model, params, pipe):
               f"mean TTFT {m['mean_ttft_s']:.3f}s, "
               f"{m['decode_compiles']} decode compiles over "
               f"{m['decode_steps']} steps ({m['decode_shapes']} shape buckets)")
-        print(f"[{name}] prefill: {m['prefill_compiles']} compiles / "
+        prefill_path = "chunked-kernel" if eng.prefill_kernel else "gather"
+        print(f"[{name}] prefill ({prefill_path}): "
+              f"{m['prefill_tok_per_s']:.1f} suffix tok/s steady-state, "
+              f"{m['prefill_compiles']} compiles / "
               f"{m['prefill_batches']} batched calls "
               f"({m['prefill_shapes']} length buckets); prefix cache "
               f"{'on' if eng.prefix_cache else 'off'}: "
@@ -159,6 +165,12 @@ def main():
                     help="decode read path: paged-attention kernel vs "
                          "gather-into-contiguous (auto: paged where the "
                          "model supports it)")
+    ap.add_argument("--prefill-kernel", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="batched suffix-prefill read path: chunked-prefill "
+                         "kernel over the paged pool vs gather-into-"
+                         "contiguous (auto: kernel where the model supports "
+                         "it)")
     ap.add_argument("--bucket-sizes", default="",
                     help="comma-separated decode batch buckets, e.g. "
                          "'1,2,4,8' (default: powers of two up to "

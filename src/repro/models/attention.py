@@ -222,8 +222,8 @@ def gqa_empty_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
 
 def gqa_apply(cfg, params, x, *, ctx: ParallelCtx, cos_sin=None,
               cache=None, pos=None, local: bool = False,
-              causal: bool = True,
-              paged_tables=None) -> Tuple[jax.Array, Optional[dict]]:
+              causal: bool = True, paged_tables=None,
+              lens=None) -> Tuple[jax.Array, Optional[dict]]:
     from repro.models.linear import linear_apply
     b, t, _ = x.shape
     hd = cfg.head_dim
@@ -238,21 +238,33 @@ def gqa_apply(cfg, params, x, *, ctx: ParallelCtx, cos_sin=None,
     scale = cfg.query_scale if cfg.query_scale > 0 else None
     new_cache = None
     if paged_tables is not None:
-        # paged decode: the cache leaves are the pool's page stores
-        # (num_blocks, block_size, hkv, hd); write this token's K/V straight
-        # into its page and attend through the block-table indirection —
-        # no contiguous copy of the KV history is ever materialized.
-        assert pos is not None and t == 1, "paged path is decode-only"
+        # paged serving: the cache leaves are the pool's page stores
+        # (num_blocks, block_size, hkv, hd); write the new K/V straight into
+        # their pages and attend through the block-table indirection — no
+        # contiguous copy of the KV history is ever materialized. t == 1 is
+        # a decode step; t > 1 is a chunked suffix prefill writing row i's L
+        # tokens at positions pos[i] + j (padded tail tokens past lens[i]
+        # land in the row's last partial page or the trash page, hidden by
+        # the causal masks until a later decode overwrites them).
+        assert pos is not None and jnp.ndim(pos) == 1, \
+            "paged path needs per-request positions"
         from repro.kernels import ops as kops
         bs = cache["k"].shape[1]
-        blk = jnp.take_along_axis(paged_tables, (pos // bs)[:, None],
-                                  axis=1)[:, 0]
-        kf = cache["k"].at[blk, pos % bs].set(k[:, 0].astype(cache["k"].dtype))
-        vf = cache["v"].at[blk, pos % bs].set(v[:, 0].astype(cache["v"].dtype))
-        o = kops.paged_attention(
-            q[:, 0], kf, vf, paged_tables, pos + 1, scale=scale,
-            cap=cfg.attn_logit_softcap, window=window,
-            impl=ctx.paged_attn_impl)[:, None].astype(q.dtype)
+        p = pos[:, None] + jnp.arange(t)                 # (B, t) positions
+        blk = jnp.take_along_axis(paged_tables, p // bs, axis=1)
+        kf = cache["k"].at[blk, p % bs].set(k.astype(cache["k"].dtype))
+        vf = cache["v"].at[blk, p % bs].set(v.astype(cache["v"].dtype))
+        if t == 1:
+            o = kops.paged_attention(
+                q[:, 0], kf, vf, paged_tables, pos + 1, scale=scale,
+                cap=cfg.attn_logit_softcap, window=window,
+                impl=ctx.paged_attn_impl)[:, None].astype(q.dtype)
+        else:
+            assert lens is not None, "chunked paged prefill needs lens"
+            o = kops.chunked_prefill(
+                q, kf, vf, paged_tables, pos, lens, scale=scale,
+                cap=cfg.attn_logit_softcap, window=window,
+                impl=ctx.paged_attn_impl).astype(q.dtype)
         y = linear_apply(params["wo"], o.reshape(b, t, cfg.n_heads * hd))
         return y, {"k": kf, "v": vf}
     if cache is not None:

@@ -150,7 +150,8 @@ def block_init(key, cfg: ModelConfig, spec: SubSpec, dtype=jnp.float32):
 
 
 def block_apply(cfg, spec: SubSpec, params, x, *, ctx: ParallelCtx,
-                cos_sin, cache=None, pos=None, paged_tables=None):
+                cos_sin, cache=None, pos=None, paged_tables=None,
+                lens=None):
     """Returns (x, aux, new_cache)."""
     _, norm = make_norm(cfg)
     res_scale = (cfg.scale_depth / math.sqrt(cfg.n_layers)
@@ -161,7 +162,7 @@ def block_apply(cfg, spec: SubSpec, params, x, *, ctx: ParallelCtx,
                     pos=pos)
     if spec.kind == "attn":
         mixer_kw.update(cos_sin=cos_sin, local=spec.is_local,
-                        paged_tables=paged_tables)
+                        paged_tables=paged_tables, lens=lens)
     h, new_mixer_cache = _MIXER_APPLY[spec.kind](
         cfg, params["mixer"], norm(params["norm1"], x), **mixer_kw)
     if cfg.post_block_norm:
@@ -280,7 +281,8 @@ class LM:
 
     # ---------------- backbone ----------------------------------------------
     def _backbone(self, params, x, *, ctx: ParallelCtx, cache=None, pos=None,
-                  paged_tables=None, remat: str = "none", capture=None):
+                  paged_tables=None, lens=None, remat: str = "none",
+                  capture=None):
         cfg = self.cfg
         prefix, period, n_rep = period_specs(cfg)
         b, t = x.shape[0], x.shape[1]
@@ -295,7 +297,7 @@ class LM:
                 lp = capture.wrap(lp, f"prefix/{i}")
             x, aux, nc = block_apply(cfg, spec, lp, x,
                                      ctx=ctx, cos_sin=cos_sin, cache=c, pos=pos,
-                                     paged_tables=paged_tables)
+                                     paged_tables=paged_tables, lens=lens)
             aux_total += aux
             new_prefix_caches.append(nc)
 
@@ -321,7 +323,7 @@ class LM:
                 c = blk_cache[f"sub{j}"] if blk_cache is not None else None
                 x, a, nc = block_apply(cfg, spec, blk[f"sub{j}"], x, ctx=ctx,
                                        cos_sin=cos_sin, cache=c, pos=pos,
-                                       paged_tables=paged_tables)
+                                       paged_tables=paged_tables, lens=lens)
                 aux = aux + a
                 new_caches[f"sub{j}"] = nc
             x = constrain_act(x, ctx)
@@ -409,7 +411,8 @@ class LM:
         return self._logits(params, h[:, -1:]), cache
 
     def prefill_chunk(self, params, tokens, cache, pos, lens, *,
-                      ctx: ParallelCtx = CPU_CTX, compute_dtype=jnp.bfloat16):
+                      ctx: ParallelCtx = CPU_CTX, compute_dtype=jnp.bfloat16,
+                      block_tables=None):
         """Prefill a batch of suffix chunks at per-request cache offsets.
 
         tokens: (B, L) int32 — each row is a request's un-cached prompt
@@ -421,13 +424,22 @@ class LM:
         attends to its cached prefix KV without recomputing it. Returns the
         logits at each row's last *valid* token, (B, vocab).
 
+        With ``block_tables`` (B, nb) the cache is the paged view from
+        ``BlockPool.paged_cache`` — attention layers scatter the suffix K/V
+        into their pages and attend through the table indirection
+        (``kernels/chunked_prefill.py``) instead of a gathered contiguous
+        cache.
+
         Padded tail tokens (``j >= lens[i]``) write garbage K/V past the
         row's real length; the causal mask hides those positions until a
-        later decode overwrites them, and ``BlockPool.scatter_suffix`` never
-        writes blocks past the suffix back to the pool.
+        later decode overwrites them, and ``BlockPool.scatter_suffix`` (the
+        gather path) never writes blocks past the suffix back to the pool —
+        the paged path's garbage lands in the row's own last partial page
+        or the trash page.
         """
         x = self._embed(params, tokens).astype(compute_dtype)
-        h, _, cache = self._backbone(params, x, ctx=ctx, cache=cache, pos=pos)
+        h, _, cache = self._backbone(params, x, ctx=ctx, cache=cache, pos=pos,
+                                     paged_tables=block_tables, lens=lens)
         idx = jnp.maximum(lens - 1, 0)
         h_last = jnp.take_along_axis(
             h, idx[:, None, None].astype(jnp.int32), axis=1)

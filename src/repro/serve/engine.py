@@ -16,14 +16,22 @@ resumes on the same trajectory.
 
 Prefill path (pure-attention LMs): admission looks up the longest cached
 block-aligned prefix in the pool's prefix registry (``prefix_cache``,
-auto-on) and only the *suffix* is computed; joiners whose suffixes land in
-the same length bucket (``prefill_bucket_sizes``, default powers of two
-with floor 8) prefill together in ONE jitted ``LM.prefill_chunk`` call at
-per-row cache offsets — so prefill compiles per (batch, length, blocks)
-bucket instead of per prompt length (``metrics()["prefill_compiles"]``).
-``fork()`` clones a running request copy-on-write for best-of-n sampling.
-Models with extras (whisper frames, VLM vision prefixes) and
-recurrent/hybrid archs keep the legacy per-request prefill.
+auto-on; token-exact intern chains over full blocks) and only the *suffix*
+is computed; joiners whose suffixes land in the same length bucket
+(``prefill_bucket_sizes``, default powers of two with floor 8) prefill
+together in ONE jitted ``LM.prefill_chunk`` call at per-row cache offsets
+— so prefill compiles per (batch, length, blocks) bucket instead of per
+prompt length (``metrics()["prefill_compiles"]``). By default
+(``prefill_kernel=True`` where the model supports it) that call runs the
+chunked-prefill kernel (``kernels/chunked_prefill.py``) directly against
+the pool's page stores with the per-request block tables: attention
+scatters the suffix K/V into its pages and attends through the table
+indirection with per-row prefix-offset causal masks — no gather or
+scatter of the cache; the donated stores flow back via ``absorb_paged``.
+``prefill_kernel=False`` keeps the gather-into-contiguous path as the
+in-tree oracle. ``fork()`` clones a running request copy-on-write for
+best-of-n sampling. Models with extras (whisper frames, VLM vision
+prefixes) and recurrent/hybrid archs keep the legacy per-request prefill.
 
 Decode read path: by default (``paged_kernel=True`` where the model
 supports it) each step passes the pool's page stores *directly* into the
@@ -43,7 +51,11 @@ Shape buckets: the decode batch is padded to the next size in
 ``step()`` hits a small closed set of jit signatures instead of recompiling
 every time traffic shifts; ``metrics()["decode_compiles"]`` exposes the
 compile-cache counter that tests/test_serve_buckets.py guards. Padding rows
-read/write the pool's trash block and trash state slot.
+read/write the pool's trash page and trash state slot.
+
+docs/serving.md documents the page/block/intern-chain/bucket vocabulary,
+the request data flow, and every CLI knob; docs/kernels.md documents the
+decode and chunked-prefill kernels this engine drives.
 """
 from __future__ import annotations
 
@@ -147,6 +159,7 @@ class ContinuousEngine:
                  block_size: int = 16, num_blocks: int = 512,
                  max_running: int = 8,
                  paged_kernel: Optional[bool] = None,
+                 prefill_kernel: Optional[bool] = None,
                  paged_attn_impl: Optional[str] = None,
                  bucket_sizes: Optional[Sequence[int]] = None,
                  prefix_cache: Optional[bool] = None,
@@ -185,6 +198,16 @@ class ContinuousEngine:
         if self.paged_kernel and not supported:
             raise ValueError(
                 "paged decode kernel unsupported for this model (MLA/enc-dec)")
+        # the chunked-prefill kernel needs both the chunked suffix-prefill
+        # path (pure-attention LM) and page-store-aware attention (plain GQA
+        # K/V caches, no MLA latents)
+        prefill_supported = chunk_ok and supported
+        self.prefill_kernel = (prefill_supported if prefill_kernel is None
+                               else prefill_kernel)
+        if self.prefill_kernel and not prefill_supported:
+            raise ValueError(
+                "chunked-prefill kernel unsupported for this model "
+                "(recurrent/hybrid/MLA/enc-dec layers)")
         buckets = set(bucket_sizes or default_bucket_sizes(max_running))
         buckets.add(max_running)        # largest bucket must cover the batch
         self.bucket_sizes = tuple(sorted(buckets))
@@ -199,6 +222,8 @@ class ContinuousEngine:
         self._decode_tokens = 0              # ... decode wall time / tokens
         self._decode_steps = 0
         self._prefill_batches = 0
+        self._prefill_time = 0.0             # steady-state batched-prefill ...
+        self._prefill_tokens = 0             # ... wall time / suffix tokens
         self._prompt_tokens = 0              # prefix-cache hit-rate counters
         self._prefix_hit_tokens = 0
         m, cd = model, compute_dtype
@@ -224,6 +249,16 @@ class ContinuousEngine:
                 donate_argnums=(2,))
         else:
             self._prefill_chunk = None
+        if self.prefill_kernel:
+            # page stores donated, like decode: the suffix K/V scatter and
+            # the chunked-prefill kernel update the pages in place
+            self._prefill_chunk_paged = jax.jit(
+                lambda p, tk, c, pos, lens, bt: m.prefill_chunk(
+                    p, tk, c, pos, lens, ctx=ctx, compute_dtype=cd,
+                    block_tables=bt),
+                donate_argnums=(2,))
+        else:
+            self._prefill_chunk_paged = None
         self._sample = jax.jit(_sample_rows)
 
     # ------------------------------------------------------------------ API
@@ -372,6 +407,8 @@ class ContinuousEngine:
             n = int(self._prefill._cache_size())
             if self._prefill_chunk is not None:
                 n += int(self._prefill_chunk._cache_size())
+            if self._prefill_chunk_paged is not None:
+                n += int(self._prefill_chunk_paged._cache_size())
             return n
         except AttributeError:   # older jax: fall back to signatures seen
             return len(self._prefill_shapes)
@@ -386,6 +423,8 @@ class ContinuousEngine:
         self._decode_tokens = 0
         self._decode_steps = 0
         self._prefill_batches = 0
+        self._prefill_time = 0.0
+        self._prefill_tokens = 0
         self._prompt_tokens = 0
         self._prefix_hit_tokens = 0
         for k in self.pool.stats:
@@ -406,6 +445,13 @@ class ContinuousEngine:
             "prefill_compiles": self.prefill_compile_count(),
             "prefill_shapes": len(self._prefill_shapes),
             "prefill_batches": self._prefill_batches,
+            # steady-state batched suffix-prefill throughput (compiling
+            # signatures excluded), and which read path produced it:
+            # 1.0 = chunked-prefill kernel, 0.0 = gather oracle
+            "prefill_tok_per_s": (self._prefill_tokens /
+                                  max(self._prefill_time, 1e-9)
+                                  if self._prefill_tokens else 0.0),
+            "prefill_kernel": float(self.prefill_kernel),
             "prefix_hit_rate": (self._prefix_hit_tokens /
                                 max(self._prompt_tokens, 1)),
             "prefix_hit_tokens": self._prefix_hit_tokens,
@@ -481,7 +527,15 @@ class ContinuousEngine:
         """One jitted prefill over a same-bucket group of (request, tokens,
         cached-prefix-len) joiners, already allocated by ``step()``: each row
         prefills only the suffix its cached prefix does not cover, at its own
-        cache offset, padded to the (batch, suffix-len, blocks) bucket."""
+        cache offset, padded to the (batch, suffix-len, blocks) bucket.
+
+        ``prefill_kernel=True`` (the default where supported) hands the
+        pool's page stores straight to the jitted ``prefill_chunk`` with the
+        per-request block tables: attention scatters the suffix K/V into its
+        pages and attends through the indirection
+        (``kernels/chunked_prefill.py``); the donated stores flow back via
+        ``absorb_paged`` — no gather/scatter of the cache. The gather path
+        stays as the in-tree oracle."""
         reqs = [r for r, _, _ in group]
         ids = [r.req_id for r in reqs]
         starts = [cached for _, _, cached in group]
@@ -492,17 +546,32 @@ class ContinuousEngine:
         b_pad = self._bucket_batch(len(group))
         nb_pad = _pow2_at_least(max(self.pool.blocks_for(s + l_pad)
                                     for s in starts))
-        self._prefill_shapes.add((b_pad, l_pad, nb_pad))
+        sig = (b_pad, l_pad, nb_pad)
+        fresh = sig not in self._prefill_shapes
+        self._prefill_shapes.add(sig)
         tok = np.zeros((b_pad, l_pad), np.int32)
         for i, s in enumerate(suffixes):
             tok[i, :len(s)] = s
         pos = jnp.asarray(starts + [0] * (b_pad - len(group)), jnp.int32)
         ln = jnp.asarray(lens + [1] * (b_pad - len(group)), jnp.int32)
-        cache = self.pool.gather_batch(ids, rows=b_pad, blocks=nb_pad)
-        logits, cache = self._prefill_chunk(self.params, jnp.asarray(tok),
-                                            cache, pos, ln)
-        self.pool.scatter_suffix(ids, cache, starts, lens, rows=b_pad,
-                                 blocks=nb_pad)
+        t0 = time.perf_counter()
+        if self.prefill_kernel:
+            tables = self.pool.padded_tables(ids, rows=b_pad, blocks=nb_pad)
+            cache = self.pool.paged_cache(ids, rows=b_pad)
+            logits, cache = self._prefill_chunk_paged(
+                self.params, jnp.asarray(tok), cache, pos, ln, tables)
+            logits = jax.block_until_ready(logits)
+            self.pool.absorb_paged(ids, cache, rows=b_pad)
+        else:
+            cache = self.pool.gather_batch(ids, rows=b_pad, blocks=nb_pad)
+            logits, cache = self._prefill_chunk(self.params, jnp.asarray(tok),
+                                                cache, pos, ln)
+            logits = jax.block_until_ready(logits)
+            self.pool.scatter_suffix(ids, cache, starts, lens, rows=b_pad,
+                                     blocks=nb_pad)
+        if not fresh:                       # steady-state timer: skip compiles
+            self._prefill_time += time.perf_counter() - t0
+            self._prefill_tokens += sum(lens)
         self._prefill_batches += 1
         nxt = self._sample_tokens(logits, reqs, pad_to=b_pad)
         now = time.perf_counter()

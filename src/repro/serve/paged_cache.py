@@ -1,7 +1,16 @@
 """Paged KV-cache block pool for continuous batching.
 
-The pool owns all KV storage as fixed-size *token pages* plus a per-request
-*state* store, and exposes two read paths:
+Vocabulary (shared with docs/serving.md): a *page* is a physical
+``block_size``-token slab of the pooled page stores (page 0 is the
+reserved trash page); a *block* is the logical unit — a request's token
+stream cut into ``block_size``-token runs, its *block table* mapping block
+i to the page holding it; a *slot* holds per-request state that does not
+grow with tokens (slot ``max_requests`` is the trash slot); an *intern
+chain* is the prefix registry's token-exact key structure; a *bucket* is a
+padded jit-signature class (batch rows / block envelope).
+
+The pool owns all KV storage as fixed-size token pages plus a per-request
+state store, and exposes two read paths:
 
   * **paged** (the decode hot path): ``paged_cache()`` hands the model the
     page stores *themselves* — token leaves are kept in the leaf's original
@@ -36,9 +45,9 @@ hash-indexed registry maps *full* blocks of committed tokens to their pages,
 so a new request whose prompt shares a block-aligned prefix with anything
 served before reuses those pages instead of recomputing them
 (``alloc(..., tokens=)`` returns how many prefix tokens were cached).
-Registry keys are interned ``(parent_prefix, block_tokens)`` chains — two
-prefixes collide only if they are token-for-token identical, so lookups are
-always token-exact. When a request frees, registered blocks with no
+Registry keys are intern chains — interned ``(parent_prefix,
+block_tokens)`` ids — so two prefixes collide only if they are
+token-for-token identical and lookups are always token-exact. When a request frees, registered blocks with no
 remaining references park in an LRU of *cached* blocks instead of the free
 list; allocation evicts from that LRU only under pool pressure. Shared
 blocks are never written: writes target the block holding the request's

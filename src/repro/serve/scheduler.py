@@ -1,13 +1,16 @@
 """Continuous-batching scheduler: request queue + admission control.
 
-Requests join the running decode batch the moment a slot and enough cache
-blocks are available — no waiting for a synchronized batch to drain — and
-are evicted (blocks freed) the step they hit max-tokens/EOS. When the block
-pool runs dry mid-decode the youngest running request is preempted: its
-blocks are freed and it is pushed back to the front of the queue, to be
-re-prefilled over prompt + tokens-generated-so-far once memory frees up
-(generation is deterministic per request, so a preempted greedy request
-resumes on the same trajectory).
+Requests join the running decode batch the moment a state slot and enough
+cache blocks are available — no waiting for a synchronized batch to drain
+— and are evicted (their pages freed, or parked in the prefix cache's LRU
+if registered) the step they hit max-tokens/EOS. Admission counts
+LRU-evictable cached pages as capacity, since the pool reclaims them on
+demand. When the pool runs dry mid-decode the youngest running request is
+preempted: its pages are freed and it is pushed back to the front of the
+queue, to be re-prefilled over prompt + tokens-generated-so-far once
+memory frees up (generation is deterministic per request, so a preempted
+greedy request resumes on the same trajectory — and its own committed
+blocks are prefix-cache hits). Vocabulary and data flow: docs/serving.md.
 """
 from __future__ import annotations
 

@@ -1,0 +1,36 @@
+"""Docs health: the same link/anchor/flag checker CI's docs job runs.
+
+Keeps README.md + docs/ honest from the tier-1 suite too: intra-repo
+links and anchors must resolve, and every ``launch/serve.py`` argparse
+flag must be documented in docs/serving.md.
+"""
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def test_docs_links_anchors_and_serving_flags():
+    r = subprocess.run([sys.executable, str(ROOT / "tools" / "check_docs.py")],
+                       capture_output=True, text=True)
+    assert r.returncode == 0, f"\n{r.stdout}{r.stderr}"
+
+
+def test_checker_catches_dead_links(tmp_path):
+    """The checker itself must not be vacuously green: a dead link in a
+    doc copy has to fail."""
+    import shutil
+    root = tmp_path / "repo"
+    (root / "src" / "repro" / "launch").mkdir(parents=True)
+    (root / "tools").mkdir()
+    (root / "docs").mkdir()
+    shutil.copy(ROOT / "tools" / "check_docs.py", root / "tools")
+    shutil.copy(ROOT / "src" / "repro" / "launch" / "serve.py",
+                root / "src" / "repro" / "launch")
+    shutil.copy(ROOT / "docs" / "serving.md", root / "docs")
+    (root / "README.md").write_text("[gone](docs/missing.md)\n")
+    r = subprocess.run([sys.executable, str(root / "tools" / "check_docs.py")],
+                       capture_output=True, text=True)
+    assert r.returncode == 1
+    assert "dead link" in r.stdout
