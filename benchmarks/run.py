@@ -444,6 +444,89 @@ def bench_serving():
 
 
 # ---------------------------------------------------------------------------
+# Distributed calibration: sharded vs single-device throughput + parity
+# ---------------------------------------------------------------------------
+
+def bench_dist():
+    """Sharded (butterfly-TSQR) vs single-device COALA calibration.
+
+    Runs in a subprocess with 8 fake host devices (the device count is
+    locked at jax init, which already happened in this process). On the CPU
+    container the per-shard capture loop is serialized on one host, so the
+    sharded wall time is an upper bound — on a real mesh phase 1 runs
+    per-host in parallel and only the butterfly reduce is on the wire. The
+    parity row is the claim that matters: the distributed reduction changes
+    the numbers by fp32 roundoff only. Row schema in docs/benchmarks.md.
+    """
+    import os
+    import subprocess
+    import sys
+    n_batches = 2 if SMOKE else 4
+    code = f"""
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_smoke_config
+from repro.core.calibrate import calibrate_model
+from repro.data import DataConfig, TokenPipeline
+from repro.dist.calibrate import calibrate_sharded
+cfg = get_smoke_config("smollm_135m")
+from repro.models import build_model
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                global_batch=8, seed=5), cfg)
+batches = [pipe.get_batch(i) for i in range({n_batches})]
+tokens = sum(int(b["tokens"].size) for b in batches)
+t0 = time.perf_counter(); single = calibrate_model(model, params, batches)
+t_single = time.perf_counter() - t0
+mesh = jax.make_mesh((8,), ("data",))
+t0 = time.perf_counter()
+sharded = calibrate_sharded(model, params, batches, mesh)
+t_sharded = time.perf_counter() - t0
+rs, rd = single.r_factors(), sharded.r_factors()
+gram_rel = max(
+    float(np.linalg.norm(np.asarray(rd[p]).T @ np.asarray(rd[p])
+                         - np.asarray(rs[p]).T @ np.asarray(rs[p]))
+          / np.linalg.norm(np.asarray(rs[p]).T @ np.asarray(rs[p])))
+    for p in rs)
+print("BENCH_JSON " + json.dumps(dict(
+    tokens=tokens, t_single=t_single, t_sharded=t_sharded,
+    gram_rel=gram_rel, layers=len(rs))))
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep * bool(env.get("PYTHONPATH")) + \
+        env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=900)
+    if out.returncode != 0:
+        # fail the CI bench step loudly — a quiet error row would keep the
+        # step green with the acceptance row silently missing
+        raise RuntimeError(
+            f"dist benchmark subprocess failed:\n{out.stderr[-2000:]}")
+    payload = json.loads(out.stdout.split("BENCH_JSON ", 1)[1])
+    tok = payload["tokens"]
+    _row("dist/calib_layers", payload["layers"], "captured linear layers")
+    _row("dist/calib_single_tok_per_s", f"{tok / payload['t_single']:.1f}",
+         "single-device Calibrator (streaming TSQR)")
+    _row("dist/calib_sharded8_tok_per_s", f"{tok / payload['t_sharded']:.1f}",
+         "8 data shards + butterfly reduce (CPU: shard loop serialized)")
+    _row("dist/sharded_vs_single_ratio",
+         f"{payload['t_single'] / payload['t_sharded']:.3f}",
+         "wall-time ratio; >1 means sharded faster (expect ~1/shards on "
+         "CPU, ~shards on a real mesh)")
+    _row("dist/r_gram_rel_err", f"{payload['gram_rel']:.2e}",
+         "max over layers of ||R_d^T R_d - R_s^T R_s||/||R_s^T R_s||; "
+         "acceptance: < 1e-3")
+    if not payload["gram_rel"] < 1e-3:        # enforced, not just printed
+        raise RuntimeError(
+            f"sharded-vs-single R parity regressed: gram_rel "
+            f"{payload['gram_rel']:.2e} >= 1e-3")
+
+
+# ---------------------------------------------------------------------------
 # Roofline summary from the dry-run artifacts
 # ---------------------------------------------------------------------------
 
@@ -473,6 +556,7 @@ ALL = {
     "thm1": thm1_convergence,
     "kernels": bench_kernels,
     "serve": bench_serving,
+    "dist": bench_dist,
     "roofline": roofline_summary,
 }
 

@@ -1,0 +1,142 @@
+"""Data-parallel Gram-free COALA calibration (paper §4.2, scaled out).
+
+The calibration matrix ``X`` (features × tokens) for a production corpus
+never fits on one device. The paper's answer — and this module's — is that
+only the n×n ``R`` factor of ``Xᵀ`` is ever needed (Prop. 2), and R factors
+compose by QR-stacking. So calibration shards the *token rows* over the
+``data`` mesh axis:
+
+  1. every shard streams its own activation rows into per-layer local R
+     factors (``core.calibrate.Calibrator`` — the same TSQR streaming as the
+     single-device path, never materializing X);
+  2. the per-shard R factors reduce with the butterfly
+     ``core.tsqr.distributed_tsqr_r`` inside ``shard_map`` — log2(shards)
+     ppermute+QR rounds, after which every device holds the identical full
+     R. No Gram matrix, no gather, O(n²) per-device state.
+
+Because R is unique for full-rank input under the non-negative-diagonal sign
+convention, the combined R matches the single-device ``Calibrator`` output
+for ANY shard count — entrywise within fp32 roundoff when X is
+well-conditioned, and in general up to a left-orthogonal factor whose
+entrywise footprint scales with cond(X) but under which COALA's weighted
+projection (and the Gram form RᵀR) is exactly invariant. Shard-count
+invariance is a testable contract (``tests/test_dist_calibrate.py``) in both
+senses, not a hope. The Gram
+path squares the condition number before it ever reduces; the QR path
+reduces already-orthogonalized factors, which is why ill-conditioned
+calibration survives sharding here and not in Gram-based baselines.
+
+On this CPU container the per-shard capture runs as a host loop over the
+shards of each batch (one fake device per shard); on a real fleet each host
+runs step 1 on its local data and only step 2 touches the interconnect.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Iterable, List
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.calibrate import Calibrator
+from repro.core.tsqr import distributed_tsqr_r, qr_r, square_r, tsqr_tree
+from repro.dist import compat
+
+compat.install()
+
+
+def split_batch(batch: dict, n_shards: int) -> List[dict]:
+    """Row-split every batch leaf into ``n_shards`` equal sub-batches."""
+    b = jax.tree.leaves(batch)[0].shape[0]
+    if b % n_shards:
+        raise ValueError(f"batch rows {b} not divisible by {n_shards} shards")
+    per = b // n_shards
+    return [jax.tree.map(lambda x: x[s * per:(s + 1) * per], batch)
+            for s in range(n_shards)]
+
+
+@functools.lru_cache(maxsize=None)
+def _butterfly_reduce_fn(mesh, axis: str):
+    """One jitted butterfly-reduce per (mesh, axis) — ``calibrate_sharded``
+    calls it once per captured layer, and a fresh closure each time would
+    re-trace and re-compile the identical (n, n) program per layer."""
+    return jax.jit(jax.shard_map(
+        lambda r: distributed_tsqr_r(r[0], axis),
+        mesh=mesh, in_specs=P(axis, None, None), out_specs=P(),
+        check_vma=False))
+
+
+def combine_r_shards(r_stack: jax.Array, mesh, axis: str = "data") -> jax.Array:
+    """Reduce per-shard R factors ``(S, n, n)`` to one full R on-mesh.
+
+    Runs the butterfly TSQR over ``axis`` inside ``shard_map``: each device
+    holds its shard's R, pairs XOR-wise through ``ppermute``, and after
+    log2(S) QR rounds every device holds the identical combined R (returned
+    replicated). ``S`` must equal ``mesh.shape[axis]`` (power of two).
+    """
+    size = mesh.shape[axis]
+    if r_stack.shape[0] != size:
+        raise ValueError(
+            f"r_stack has {r_stack.shape[0]} shards, mesh axis {axis!r} "
+            f"has size {size}")
+    if size == 1:
+        return square_r(qr_r(r_stack[0]))
+    return _butterfly_reduce_fn(mesh, axis)(r_stack)
+
+
+@dataclasses.dataclass
+class ShardedCalibration:
+    """Result of ``calibrate_sharded`` — duck-types the ``Calibrator`` API
+    that ``core.compress.compress_model`` consumes."""
+
+    factors: Dict[str, jax.Array]
+    tokens: Dict[str, int]
+    n_shards: int
+
+    def r_factors(self) -> Dict[str, jax.Array]:
+        return dict(self.factors)
+
+    def tokens_seen(self) -> Dict[str, int]:
+        return dict(self.tokens)
+
+
+def calibrate_sharded(model, params, batches: Iterable[dict], mesh, *,
+                      axis: str = "data") -> ShardedCalibration:
+    """Shard calibration rows over ``mesh`` axis ``axis``; butterfly-reduce
+    per-shard R factors. Returns per-layer full R factors (replicated).
+
+    Paths that only some shards observed (MoE experts routed on a subset of
+    shards) are combined host-side with the serial TSQR tree over the shards
+    that saw them — still Gram-free, just off the collective fast path.
+    """
+    n = mesh.shape[axis]
+    shard_cals = [Calibrator() for _ in range(n)]
+    n_batches = 0
+    for batch in batches:
+        n_batches += 1
+        for cal, sub in zip(shard_cals, split_batch(batch, n)):
+            model.capture_forward(params, sub, cal)
+    if n_batches == 0:
+        raise ValueError("calibrate_sharded: no calibration batches")
+
+    all_paths: List[str] = []
+    for cal in shard_cals:
+        for p in cal.streams:
+            if p not in all_paths:
+                all_paths.append(p)
+
+    factors: Dict[str, jax.Array] = {}
+    tokens: Dict[str, int] = {}
+    for path in all_paths:
+        locals_ = [square_r(cal.streams[path].r)
+                   for cal in shard_cals if path in cal.streams]
+        tokens[path] = sum(cal.streams[path].tokens_seen
+                           for cal in shard_cals if path in cal.streams)
+        if len(locals_) == n:
+            factors[path] = combine_r_shards(jnp.stack(locals_), mesh,
+                                             axis=axis)
+        else:                      # partial coverage (per-expert MoE paths)
+            factors[path] = square_r(tsqr_tree(locals_))
+    return ShardedCalibration(factors=factors, tokens=tokens, n_shards=n)

@@ -1,0 +1,104 @@
+"""jax API compatibility shims for the pinned container jax (0.4.37).
+
+The sharding subsystem — and the launchers/tests written against it — use
+three jax APIs that postdate the pin:
+
+  * ``jax.shard_map``              — promoted out of ``jax.experimental`` with
+                                     ``check_vma=`` (renamed from
+                                     ``check_rep=``) and ``axis_names=``
+                                     (manual axes; the pinned spelling is the
+                                     complement set ``auto=``)
+  * ``jax.sharding.AxisType``      — Auto/Explicit/Manual mesh axis types
+  * ``jax.make_mesh(axis_types=…)`` — the new kwarg on mesh construction
+
+``install()`` grafts equivalents onto the jax namespace **only where the
+running jax lacks them**, so the same repo code (and the subprocess test
+scenarios that call ``jax.shard_map`` / ``jax.sharding.AxisType`` directly)
+runs on both sides of the pin. On a newer jax every branch is a no-op.
+
+Importing any ``repro`` module installs the shims (see ``repro/__init__.py``);
+install() is idempotent.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+
+try:  # pinned location (jax <= 0.4.x); absent once shard_map moves to core
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+except ImportError:  # pragma: no cover - newer jax, shim never needed
+    _experimental_shard_map = None
+
+
+class AxisType(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` (newer jax).
+
+    The pinned GSPMD treats every mesh axis as what newer jax calls ``Auto``;
+    the enum exists so call sites can *spell* axis types portably. Code that
+    branches on ``Manual`` (e.g. ``constrain_act``) only does so through
+    ``get_abstract_mesh``, which the pinned jax lacks — those branches fall
+    back gracefully.
+    """
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, check_rep=None,
+              axis_names=None, auto=None):
+    """Newer-jax ``jax.shard_map`` signature on top of the pinned one.
+
+    ``check_vma`` maps to ``check_rep``; ``axis_names`` (the set of axes the
+    body is manual over) maps to its complement ``auto`` (the axes left to
+    GSPMD). Passing both old and new spellings of either knob is an error.
+    """
+    if check_vma is not None and check_rep is not None:
+        raise TypeError("pass check_vma or check_rep, not both")
+    if axis_names is not None and auto is not None:
+        raise TypeError("pass axis_names or auto, not both")
+    rep = check_rep if check_rep is not None else (
+        check_vma if check_vma is not None else True)
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _experimental_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                   out_specs=out_specs, check_rep=rep,
+                                   auto=frozenset(auto or ()))
+
+
+def _axis_size(axis_name):
+    """Newer-jax ``jax.lax.axis_size``: static size of a bound mesh axis.
+
+    On the pinned jax, ``jax.core.axis_frame(name)`` returns the size as a
+    plain int inside shard_map/pmap bodies — exactly the static value the
+    butterfly TSQR needs to unroll its log2(size) rounds.
+    """
+    return jax.core.axis_frame(axis_name)
+
+
+def _wrap_make_mesh(real_make_mesh):
+    def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None,
+                  **kwargs):
+        # the pinned GSPMD has no axis types — every axis behaves as Auto;
+        # accept and drop the kwarg so newer-jax call sites parse
+        del axis_types
+        return real_make_mesh(axis_shapes, axis_names, devices=devices,
+                              **kwargs)
+    make_mesh.__doc__ = real_make_mesh.__doc__
+    make_mesh._repro_compat = True
+    return make_mesh
+
+
+def install() -> None:
+    """Idempotently install the shims onto the jax namespace."""
+    if not hasattr(jax, "shard_map") and _experimental_shard_map is not None:
+        jax.shard_map = shard_map
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = AxisType
+    if not hasattr(jax.lax, "axis_size"):
+        jax.lax.axis_size = _axis_size
+    if not getattr(jax.make_mesh, "_repro_compat", False) and \
+            "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        jax.make_mesh = _wrap_make_mesh(jax.make_mesh)

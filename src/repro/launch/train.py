@@ -37,15 +37,13 @@ import argparse  # noqa: E402
 import time  # noqa: E402
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.ckpt import CheckpointManager  # noqa: E402
 from repro.config import TrainConfig  # noqa: E402
 from repro.configs import get_config, get_smoke_config  # noqa: E402
 from repro.data import DataConfig, TokenPipeline  # noqa: E402
 from repro.dist.sharding import (batch_axes_of, batch_specs,  # noqa: E402
-                                 param_specs, to_named)
+                                 to_named, train_state_specs)
 from repro.launch.mesh import make_mesh  # noqa: E402
 from repro.models import build_model  # noqa: E402
 from repro.models.common import CPU_CTX, ParallelCtx  # noqa: E402
@@ -109,17 +107,15 @@ def main():
 
     step_fn = make_train_step(model, tcfg, ctx, mesh=mesh)
     if multi:
-        pspecs = param_specs(cfg, state["params"], mesh, mode="train")
-        sspecs = {"params": pspecs,
-                  "opt": {"m": pspecs, "v": pspecs, "step": P()}}
-        if "err" in state:
-            sspecs["err"] = jax.tree.map(lambda s: P("pod", *tuple(s)),
-                                         pspecs,
-                                         is_leaf=lambda x: isinstance(x, P))
+        sspecs = train_state_specs(cfg, state, mesh, strategy="fsdp")
         bspecs = batch_specs(cfg, pipe.get_batch(0), mesh)
         step_fn = jax.jit(step_fn,
                           in_shardings=(to_named(sspecs, mesh),
                                         to_named(bspecs, mesh)),
+                          # pin the output state to the same shardings so the
+                          # step round-trips (XLA would otherwise pick its
+                          # own layout for some leaves and poison step 2)
+                          out_shardings=(to_named(sspecs, mesh), None),
                           donate_argnums=0)
         state = jax.device_put(state, to_named(sspecs, mesh))
     else:

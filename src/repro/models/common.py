@@ -53,6 +53,15 @@ def constrain_act(x, ctx: "ParallelCtx"):
         manual = {n for n, t in zip(am.axis_names, am.axis_types)
                   if t == AxisType.Manual}
     except Exception:
+        # pinned jax (no abstract-mesh API): its SPMD partitioner cannot
+        # express full-mesh constraints inside a manual subgroup at all
+        # (hlo_sharding_util CHECK) — drop the layout hint there entirely.
+        # A nonempty axis env means we are under shard_map/pmap.
+        try:
+            if jax.core.nonempty_axis_env_DO_NOT_USE():
+                return x
+        except Exception:
+            pass
         manual = set()
     axes = tuple(a for a in ctx.batch_axes if a not in manual)
     if not axes:

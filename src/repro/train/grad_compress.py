@@ -12,13 +12,22 @@ Error feedback telescopes the quantization bias across steps, which is what
 keeps convergence intact (EF-SGD, Karimireddy et al. 2019). Quantization is
 per-block(128) symmetric int8 with an fp32 scale — ~4x fewer cross-pod bytes.
 
-Structure: the *entire* loss+grad computation runs inside a ``shard_map``
-that is manual ONLY over the ``pod`` axis (``axis_names={'pod'}``); the
-data/model axes stay automatic, so the body is ordinary GSPMD code. That is
-what exposes per-pod gradients to compress — under plain pjit the pod
-reduction is fused into backward and cannot be intercepted. The error state
-carries an explicit leading pod axis (spec ``P('pod', ...)``) so each pod's
-residual survives round-trips through the global value.
+Structure (two phases, keeping the model OUT of any manual region):
+
+  1. the batch reshapes to a leading pod axis ``(n_pods, B/n_pods, ...)``
+     sharded ``P('pod', ...)`` and the loss+grad runs under ``jax.vmap``
+     over that axis — per-pod gradients come out with an explicit leading
+     pod dim instead of being fused into backward's pod reduction, while
+     the data/model axes stay ordinary GSPMD code;
+  2. ONLY the quantize → psum → dequantize reduction runs inside a
+     ``shard_map`` that is manual over the ``pod`` axis. Its body is
+     elementwise math plus one ``psum`` — the only shapes the pinned XLA
+     can partition inside a manual subgroup (a ``scan``, i.e. any real
+     model, inside partial-manual shard_map trips a fatal
+     ``IsManualSubgroup`` check in the pinned partitioner).
+
+The error state carries an explicit leading pod axis (spec ``P('pod', ...)``)
+so each pod's residual survives round-trips through the global value.
 """
 from __future__ import annotations
 
@@ -35,7 +44,11 @@ def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Per-block symmetric int8. Returns (int8 payload, fp32 scales)."""
     flat = x.reshape(-1)
     pad = (-flat.shape[0]) % BLOCK
-    flat = jnp.pad(flat, (0, pad))
+    if pad:
+        # concatenate, not jnp.pad: a Pad HLO inside the pod-manual
+        # shard_map region trips a fatal IsManualSubgroup check in the
+        # pinned XLA partitioner; Concatenate partitions fine
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
     blocks = flat.reshape(-1, BLOCK)
     scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
     scale = jnp.maximum(scale, 1e-12)
@@ -80,39 +93,46 @@ def make_compressed_grads_fn(loss_and_grad_fn: Callable, mesh,
     Returns ``f(params, batch, err) -> (loss, metrics, grads, new_err)``.
     """
 
+    from jax.sharding import NamedSharding
+
+    n_pods = mesh.shape["pod"]
+
     def wrapped(params, batch, err):
-        flat_params, pdef = jax.tree.flatten(params)
-        flat_batch, bdef = jax.tree.flatten(batch)
-        flat_err, edef = jax.tree.flatten(err)
-        np_, nb = len(flat_params), len(flat_batch)
+        # ---- phase 1: per-pod grads via vmap over an explicit pod axis ----
+        def to_pod_major(x, flat_spec):
+            y = x.reshape((n_pods, x.shape[0] // n_pods) + x.shape[1:])
+            spec = P("pod", None, *tuple(flat_spec)[1:])
+            return jax.lax.with_sharding_constraint(
+                y, NamedSharding(mesh, spec))
+
+        pbatch = jax.tree.map(
+            lambda x: to_pod_major(x, batch_spec_fn(x)), batch)
+        (loss_p, metrics_p), grads_p = jax.vmap(
+            loss_and_grad_fn, in_axes=(None, 0))(params, pbatch)
+
+        # ---- phase 2: int8+EF reduction, manual over pod only ------------
+        flat_g, gdef = jax.tree.flatten(grads_p)
+        flat_e = gdef.flatten_up_to(err)
+        ng = len(flat_g)
 
         def body(*args):
-            ps = pdef.unflatten(list(args[:np_]))
-            bs = bdef.unflatten(list(args[np_:np_ + nb]))
-            es = edef.unflatten(list(args[np_ + nb:]))
-            es = jax.tree.map(lambda e: e[0], es)          # drop local pod dim
-            (loss, metrics), grads = loss_and_grad_fn(ps, bs)
-            flat_g, gdef = jax.tree.flatten(grads)
-            flat_e2 = gdef.flatten_up_to(es)
-            outs = [quantized_mean_leaf(g, e, "pod")
-                    for g, e in zip(flat_g, flat_e2)]
-            new_g = gdef.unflatten([o[0] for o in outs])
-            new_e = gdef.unflatten([o[1][None] for o in outs])
-            loss = jax.lax.pmean(loss, "pod")
-            metrics = jax.tree.map(lambda m: jax.lax.pmean(m, "pod"), metrics)
-            return (loss, metrics, new_g, new_e)
+            gs, es = args[:ng], args[ng:]
+            outs = [quantized_mean_leaf(g[0], e[0], "pod")
+                    for g, e in zip(gs, es)]
+            return ([o[0] for o in outs], [o[1][None] for o in outs])
 
-        in_specs = (tuple(P() for _ in flat_params)        # pod-replicated
-                    + tuple(batch_spec_fn(b) for b in flat_batch)
-                    + tuple(P("pod") for _ in flat_err))
-        out_specs = (P(),
-                     jax.tree.map(lambda _: P(), {"ce": 0, "aux": 0}),
-                     jax.tree.map(lambda _: P(), params),
-                     jax.tree.map(lambda _: P("pod"), params))
-        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False,
-                             axis_names={"pod"})(
-            *flat_params, *flat_batch, *flat_err)
+        in_specs = (tuple(P("pod") for _ in flat_g)
+                    + tuple(P("pod") for _ in flat_e))
+        out_specs = ([P() for _ in flat_g], [P("pod") for _ in flat_g])
+        new_g_flat, new_e_flat = jax.shard_map(
+            body, mesh=mesh, in_specs=in_specs, out_specs=tuple(out_specs),
+            check_vma=False, axis_names={"pod"})(*flat_g, *flat_e)
+        grads = gdef.unflatten(new_g_flat)
+        new_err = gdef.unflatten(new_e_flat)
+
+        loss = jnp.mean(loss_p)
+        metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics_p)
+        return (loss, metrics, grads, new_err)
 
     return wrapped
 

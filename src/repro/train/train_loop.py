@@ -93,10 +93,11 @@ def make_train_step(model, tcfg: TrainConfig, ctx: ParallelCtx,
                     and "pod" in mesh.axis_names)
     if use_compress:
         import dataclasses as _dc
-        # inside the pod-manual region, 'pod' may not appear in shardings —
-        # the body runs per-pod with GSPMD over (data, model) only
-        ctx_pod = _dc.replace(ctx, batch_axes=tuple(
-            a for a in ctx.batch_axes if a != "pod"))
+        # the loss runs under vmap over the explicit pod axis (see
+        # grad_compress.py): layout hints and nested shard_map regions do
+        # not compose with that vmap on the pinned jax, so the per-pod body
+        # drops them — GSPMD still auto-parallelizes over (data, model)
+        ctx_pod = _dc.replace(ctx, batch_axes=(), shard_map_moe=False)
 
         def pod_loss_and_grad(params, batch):
             def loss_fn(p):
@@ -174,13 +175,5 @@ def make_train_step(model, tcfg: TrainConfig, ctx: ParallelCtx,
     return train_step
 
 
-def state_specs(model_cfg, state_tree, mesh, param_specs_fn):
-    """Shardings for the full train state (opt state mirrors params)."""
-    pspecs = param_specs_fn(model_cfg, state_tree["params"], mesh, mode="train")
-    out = {"params": pspecs,
-           "opt": {"m": pspecs, "v": pspecs,
-                   "step": P()}}
-    if "err" in state_tree and state_tree["err"] is not None:
-        out["err"] = jax.tree.map(lambda s: P("pod", *tuple(s)), pspecs,
-                                  is_leaf=lambda x: isinstance(x, P))
-    return out
+# train-state spec assembly lives in repro.dist.sharding.train_state_specs
+# (fsdp / zero1 / zero1h strategies) — the launchers and dry-run use that.

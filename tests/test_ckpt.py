@@ -67,10 +67,6 @@ def test_structure_mismatch_raises(tmp_path):
         mgr.restore({"different": jnp.zeros((1,))})
 
 
-@pytest.mark.xfail(
-    reason="seed gap: the subprocess leans on jax mesh APIs newer than the "
-           "pinned container version (fails on a clean seed checkout too)",
-    strict=False)
 def test_elastic_reshard_restore(tmp_path):
     """Restore a checkpoint saved on one mesh onto a DIFFERENT mesh (elastic
     up/down-scaling): leaves are stored unsharded and device_put under the

@@ -5,17 +5,11 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
-
-# Known-failing since the seed commit: these subprocesses import `repro.dist`
-# (a module that does not exist in this repo — only launch/train.py and
-# launch/dryrun.py reference it) and lean on jax APIs newer than the pinned
-# container version (`jax.shard_map`, `check_vma`). Marked xfail(strict=False)
-# so CI is green-vs-red instead of "5 known failures"; they flip to XPASS
-# automatically once a repro.dist port lands.
-pytestmark = pytest.mark.xfail(
-    reason="seed gap: subprocesses need the nonexistent repro.dist module / "
-           "newer jax.shard_map API", strict=False)
+# These subprocesses exercise `repro.dist` (sharding specs + the
+# jax.shard_map/AxisType compat shims installed on `import repro`) on 8 fake
+# host devices. They were xfail(strict=False) from the seed commit until the
+# subsystem landed; they now assert for real. Nothing here is unsupported on
+# the pinned jax 0.4.37 — the shims in repro/dist/compat.py close the gap.
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -12,6 +12,10 @@ Checks:
      heading in the target file (GitHub-style slugs, duplicate-aware).
   3. Every argparse flag registered in src/repro/launch/serve.py appears
      literally (e.g. ``--block-size``) in docs/serving.md.
+  4. Every mesh-related argparse flag in src/repro/launch/train.py and
+     src/repro/launch/compress.py (--mesh, --coordinator, --process-id,
+     --num-processes, --grad-compress, ...) appears literally in
+     docs/distributed.md.
 """
 from __future__ import annotations
 
@@ -81,17 +85,45 @@ def check_serve_flags() -> list:
             for f in flags if f not in doc]
 
 
+# a launcher flag is "mesh-related" (and must be documented in
+# docs/distributed.md) if it matches this — keep in sync with the
+# distributed-subsystem flag vocabulary
+MESH_FLAG_RE = re.compile(
+    r"mesh|coordinator|process|shard|grad-compress|zero")
+
+
+def check_dist_flags() -> list:
+    dist_md = ROOT / "docs" / "distributed.md"
+    if not dist_md.exists():
+        return ["docs/distributed.md is missing"]
+    doc = dist_md.read_text()
+    errors = []
+    found_any = False
+    for launcher in ("train.py", "compress.py"):
+        src = ROOT / "src" / "repro" / "launch" / launcher
+        flags = [f for f in FLAG_RE.findall(src.read_text())
+                 if MESH_FLAG_RE.search(f)]
+        found_any = found_any or bool(flags)
+        errors += [f"docs/distributed.md: undocumented launch/{launcher} "
+                   f"mesh flag {f}" for f in flags if f not in doc]
+    if not found_any:
+        errors.append("no mesh-related argparse flags found in "
+                      "launch/train.py or launch/compress.py (regex drift?)")
+    return errors
+
+
 def main() -> int:
     md_files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
     missing = [m for m in md_files if not m.exists()]
     errors = [f"missing doc file: {m.relative_to(ROOT)}" for m in missing]
     errors += check_links([m for m in md_files if m.exists()])
     errors += check_serve_flags()
+    errors += check_dist_flags()
     for e in errors:
         print(f"ERROR: {e}")
     if not errors:
         print(f"docs OK: {len(md_files)} files, all links/anchors resolve, "
-              "all serving flags documented")
+              "all serving + mesh flags documented")
     return 1 if errors else 0
 
 
