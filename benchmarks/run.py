@@ -442,6 +442,47 @@ def bench_serving():
          "chunked-prefill kernel vs gather oracle suffix tok/s; "
          "acceptance: >= 1.0")
 
+    # observability overhead: the same paged-path trace with span tracing
+    # enabled vs disabled (the metrics registry is always on — counters are
+    # plain attribute adds — so the delta is the tracing hot-path cost).
+    # Both sides are steady-state best-of-repeats, like every serve row.
+    from repro.obs import trace as obs_trace
+
+    def run_obs(tracing_on):
+        obs_trace.disable()
+        if tracing_on:
+            obs_trace.enable()
+        try:
+            eng = ContinuousEngine(model, params, compute_dtype=jnp.float32,
+                                   cache_dtype=jnp.float32, block_size=8,
+                                   num_blocks=num_blocks, max_running=4,
+                                   paged_kernel=True)
+            m = steady_state(eng, trace, "decode_tok_per_s",
+                             lambda a, b: a > b)
+        finally:
+            obs_trace.disable()
+        return m, eng
+
+    m_off, _ = run_obs(False)
+    m_on, eng_on = run_obs(True)
+    off = m_off["decode_tok_per_s"]
+    on = m_on["decode_tok_per_s"]
+    _row("serve/obs_off_decode_tok_per_s", f"{off:.2f}",
+         "tracing disabled (no-op singleton)")
+    _row("serve/obs_on_decode_tok_per_s", f"{on:.2f}",
+         "tracing + metrics enabled")
+    _row("serve/obs_overhead_pct", f"{(off - on) / max(off, 1e-9) * 100:.2f}",
+         "acceptance: < 5 (steady-state decode tok/s, best of repeats)")
+    # latency-distribution rows straight from the registry snapshot — the
+    # golden-key schema test (tests/test_obs.py) freezes these names
+    snap = eng_on.registry.snapshot()
+    for key in ("serve_ttft_seconds_p50", "serve_ttft_seconds_p99",
+                "serve_queue_wait_seconds_p50",
+                "serve_queue_wait_seconds_p99",
+                "serve_decode_step_seconds_p50",
+                "serve_decode_step_seconds_p99"):
+        _row(f"serve/{key}", f"{snap[key]:.5f}", "registry snapshot")
+
 
 # ---------------------------------------------------------------------------
 # Distributed calibration: sharded vs single-device throughput + parity

@@ -26,6 +26,8 @@ from typing import Any, Dict, List, Optional
 import jax
 import numpy as np
 
+from repro.obs import trace
+
 
 def _flatten_with_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
@@ -54,19 +56,24 @@ class CheckpointManager:
             meta.update(extra_meta)
 
         def write():
-            tmp = os.path.join(self.dir, f".tmp_step_{step}")
-            final = os.path.join(self.dir, f"step_{step}")
-            if os.path.exists(tmp):
-                shutil.rmtree(tmp)
-            os.makedirs(tmp)
-            for i, arr in enumerate(host_leaves):
-                np.save(os.path.join(tmp, f"leaf_{i}.npy"), arr)
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump(meta, f)
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)
-            self._prune()
+            # the tracer is thread-safe: an async save records this span
+            # from the background thread (its own tid lane in the trace)
+            with trace.span("ckpt.save", step=int(step),
+                            leaves=len(host_leaves),
+                            blocking=bool(blocking)):
+                tmp = os.path.join(self.dir, f".tmp_step_{step}")
+                final = os.path.join(self.dir, f"step_{step}")
+                if os.path.exists(tmp):
+                    shutil.rmtree(tmp)
+                os.makedirs(tmp)
+                for i, arr in enumerate(host_leaves):
+                    np.save(os.path.join(tmp, f"leaf_{i}.npy"), arr)
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(meta, f)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
+                self._prune()
 
         self.wait()                      # one in-flight async save at a time
         if blocking:
@@ -105,16 +112,18 @@ class CheckpointManager:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        d = os.path.join(self.dir, f"step_{step}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            meta = json.load(f)
-        paths, leaves, treedef = _flatten_with_paths(tree_like)
-        assert paths == meta["paths"], "checkpoint/tree structure mismatch"
-        arrays = [np.load(os.path.join(d, f"leaf_{i}.npy"))
-                  for i in range(len(paths))]
-        if shardings is not None:
-            flat_sh = treedef.flatten_up_to(shardings)
-            arrays = [jax.device_put(a, s) for a, s in zip(arrays, flat_sh)]
-        else:
-            arrays = [jax.numpy.asarray(a) for a in arrays]
+        with trace.span("ckpt.restore", step=int(step)):
+            d = os.path.join(self.dir, f"step_{step}")
+            with open(os.path.join(d, "manifest.json")) as f:
+                meta = json.load(f)
+            paths, leaves, treedef = _flatten_with_paths(tree_like)
+            assert paths == meta["paths"], "checkpoint/tree structure mismatch"
+            arrays = [np.load(os.path.join(d, f"leaf_{i}.npy"))
+                      for i in range(len(paths))]
+            if shardings is not None:
+                flat_sh = treedef.flatten_up_to(shardings)
+                arrays = [jax.device_put(a, s)
+                          for a, s in zip(arrays, flat_sh)]
+            else:
+                arrays = [jax.numpy.asarray(a) for a in arrays]
         return treedef.unflatten(arrays), meta

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.core.tsqr import RStreamer, square_r
 from repro.models.linear import CaptureDict
+from repro.obs import trace
 
 
 class Calibrator:
@@ -58,16 +59,17 @@ class Calibrator:
     def record(self, path: str, x: jax.Array):
         n = x.shape[-1]
         flat = jnp.asarray(x, self.dtype).reshape(-1, n)
-        if path not in self.streams:
-            self.streams[path] = RStreamer(n, self.dtype)
-        # fold in manageable chunks (bounds the QR stack size)
-        for i in range(0, flat.shape[0], self.max_tokens):
-            self.streams[path].update(flat[i:i + self.max_tokens])
-        if self.collect_gram:
-            from repro.kernels import ops as kops
-            g = kops.gram_accum(flat)
-            self.grams[path] = g if path not in self.grams \
-                else self.grams[path] + g
+        with trace.span("calib.record", path=path, tokens=flat.shape[0]):
+            if path not in self.streams:
+                self.streams[path] = RStreamer(n, self.dtype)
+            # fold in manageable chunks (bounds the QR stack size)
+            for i in range(0, flat.shape[0], self.max_tokens):
+                self.streams[path].update(flat[i:i + self.max_tokens])
+            if self.collect_gram:
+                from repro.kernels import ops as kops
+                g = kops.gram_accum(flat)
+                self.grams[path] = g if path not in self.grams \
+                    else self.grams[path] + g
 
     # ------------------------------------------------------------ results
     def r_factors(self) -> Dict[str, jax.Array]:

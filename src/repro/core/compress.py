@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.config import CompressConfig
 from repro.core import baselines as bl
 from repro.core import coala as coala_lib
+from repro.core.theory import optimal_weighted_error
 from repro.models.linear import rank_for_ratio
 
 # layer-name roles eligible for compression (paper compresses Q,K,V,O,Up,Down
@@ -54,6 +55,10 @@ class LayerReport:
     rel_err_weighted: float      # ||(W-W')R^T||/||W R^T||
     params_before: int
     params_after: int
+    # attainable minimum of the same ratio (Σ-tail of σ(W Rᵀ), theory.py's
+    # optimal_weighted_error / ||W Rᵀ||); nan when the layer had no R factor.
+    # obs/numerics.check_compression grades rel_err_weighted against this.
+    rel_err_bound: float = float("nan")
 
 
 def _solve(w_mat, r_factor, rank, ccfg: CompressConfig):
@@ -123,13 +128,21 @@ def compress_params(params, r_factors: Dict[str, jax.Array],
                     compressed_any = True
                 bts.append(b.T.astype(w.dtype))
                 ats.append(a.T.astype(w.dtype))
+                if rf is None:
+                    rel_err = bound = float("nan")
+                else:
+                    den = jnp.maximum(jnp.linalg.norm(w.T @ rf.T), 1e-9)
+                    rel_err = float(
+                        jnp.linalg.norm((w.T - a @ b) @ rf.T) / den)
+                    bound = float(optimal_weighted_error(
+                        w.T.astype(jnp.float32), rf.T.astype(jnp.float32),
+                        rank) / den)
                 reports.append(LayerReport(
                     path=f"{p}/{mat}/e{e}", rank=rank,
-                    mu=0.0, rel_err_weighted=float("nan") if rf is None else
-                    float(jnp.linalg.norm((w.T - a @ b) @ rf.T)
-                          / jnp.maximum(jnp.linalg.norm(w.T @ rf.T), 1e-9)),
+                    mu=0.0, rel_err_weighted=rel_err,
                     params_before=d_in * d_out,
-                    params_after=rank * (d_in + d_out)))
+                    params_after=rank * (d_in + d_out),
+                    rel_err_bound=bound))
             out[mat] = (jnp.stack(bts), jnp.stack(ats))
         return out
 
@@ -160,12 +173,14 @@ def compress_params(params, r_factors: Dict[str, jax.Array],
                     r_f = r_factors[p].astype(jnp.float32)
                     a, b, mu = _solve(w_mat, r_f, rank, ccfg)
                     num = jnp.linalg.norm((w_mat - a @ b) @ r_f.T)
-                    den = jnp.linalg.norm(w_mat @ r_f.T)
+                    den = jnp.maximum(jnp.linalg.norm(w_mat @ r_f.T), 1e-9)
                     reports.append(LayerReport(
                         path=p, rank=rank, mu=float(mu),
                         rel_err_weighted=float(num / den),
                         params_before=d_in * d_out,
-                        params_after=rank * (d_in + d_out)))
+                        params_after=rank * (d_in + d_out),
+                        rel_err_bound=float(optimal_weighted_error(
+                            w_mat, r_f.T, rank) / den)))
                     return {"b_t": b.T.astype(w.dtype),
                             "a_t": a.T.astype(w.dtype)}
                 return {k: walk(v, path + [k]) for k, v in node.items()}

@@ -43,6 +43,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.calibrate import Calibrator
 from repro.core.tsqr import distributed_tsqr_r, qr_r, square_r, tsqr_tree
 from repro.dist import compat
+from repro.obs import trace
 
 compat.install()
 
@@ -81,9 +82,11 @@ def combine_r_shards(r_stack: jax.Array, mesh, axis: str = "data") -> jax.Array:
         raise ValueError(
             f"r_stack has {r_stack.shape[0]} shards, mesh axis {axis!r} "
             f"has size {size}")
-    if size == 1:
-        return square_r(qr_r(r_stack[0]))
-    return _butterfly_reduce_fn(mesh, axis)(r_stack)
+    with trace.span("calib.butterfly_reduce", shards=size,
+                    n=int(r_stack.shape[-1])):
+        if size == 1:
+            return square_r(qr_r(r_stack[0]))
+        return _butterfly_reduce_fn(mesh, axis)(r_stack)
 
 
 @dataclasses.dataclass

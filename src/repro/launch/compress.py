@@ -61,6 +61,7 @@ from repro.dist.calibrate import calibrate_sharded  # noqa: E402
 from repro.launch.mesh import make_mesh  # noqa: E402
 from repro.models import build_model  # noqa: E402
 from repro.models.common import CPU_CTX  # noqa: E402
+from repro.obs import numerics, trace as obs_trace  # noqa: E402
 from repro.train.train_loop import make_train_state, make_train_step  # noqa: E402
 
 CALIB_BATCH = 8          # rows per calibration batch (the TokenPipeline below)
@@ -86,7 +87,18 @@ def main():
                          "devices are forced to match before jax init; N "
                          "must be a power of two dividing the calibration "
                          "batch)")
+    ap.add_argument("--numerics-report", action="store_true",
+                    help="print per-layer numerical health after "
+                         "calibration: cond(R) with warn/fail grading, "
+                         "insufficient-data flags, and achieved residual "
+                         "vs. the attainable bound (obs/numerics.py; works "
+                         "for both single-device and --mesh calibration)")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome/Perfetto trace_event JSON of the "
+                         "calibration/compression spans to this path")
     args = ap.parse_args()
+    if args.trace_out:
+        obs_trace.enable()
     if args.mesh:
         # fail fast (before minutes of pretrain/eval): _peek_mesh swallows
         # malformed values, so a typo would silently fall back to the
@@ -140,15 +152,27 @@ def main():
               f"(butterfly TSQR reduce)")
     else:
         cal = calibrate_model(model, params, calib_batches)
+    if args.numerics_report:
+        # duck-typed over Calibrator / ShardedCalibration: the same check
+        # covers single-device and butterfly-reduced mesh calibration
+        health = numerics.check_calibration(cal)
+        print("# calibration numerics")
+        print(numerics.format_report(health))
     ccfg = CompressConfig(method=args.method, ratio=args.ratio, lam=args.lam,
                           mu=args.mu, use_rsvd=args.rsvd)
     cparams, reports = compress_model(model, params, cal, ccfg)
+    if args.numerics_report:
+        print("# projection residual vs attainable bound")
+        print(numerics.format_report(numerics.check_compression(reports)))
     s = compression_summary(reports)
     s.update(method=args.method, base_ce=base_ce, compressed_ce=eval_ce(cparams))
     print(json.dumps(s, indent=1))
     if args.ckpt_out:
         CheckpointManager(args.ckpt_out).save(0, {"params": cparams})
         print("saved to", args.ckpt_out)
+    if args.trace_out:
+        n = obs_trace.save(args.trace_out)
+        print(f"wrote {n} trace events to {args.trace_out}")
 
 
 if __name__ == "__main__":

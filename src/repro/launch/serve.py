@@ -25,6 +25,7 @@ from repro.core.calibrate import calibrate_model
 from repro.core.compress import compress_model, compression_summary
 from repro.data import DataConfig, TokenPipeline
 from repro.models import build_model
+from repro.obs import trace as obs_trace
 from repro.serve import ContinuousEngine, ServeEngine
 
 
@@ -81,7 +82,7 @@ def _parse_buckets(spec: str):
 def run_continuous(args, cfg, model, params, pipe):
     if args.requests <= 0:
         print("no requests to serve")
-        return
+        return None
     ratio = args.compress_ratio if args.compress_ratio > 0 else 0.6
     cparams = _compressed_params(cfg, model, params, pipe, ratio)
     trace = synthetic_trace(args.requests, cfg.vocab_size, seed=args.seed,
@@ -91,6 +92,7 @@ def run_continuous(args, cfg, model, params, pipe):
     paged = tristate[args.paged_kernel]
     prefix = tristate[args.prefix_cache]
     prefill = tristate[args.prefill_kernel]
+    eng = None
     for name, p in (("dense", params), ("coala", cparams)):
         eng = ContinuousEngine(model, p, compute_dtype=jnp.float32,
                                cache_dtype=jnp.float32,
@@ -129,6 +131,7 @@ def run_continuous(args, cfg, model, params, pipe):
               f"{m['cached_blocks']} cached blocks, "
               f"{m['cow_copies']} COW copies, "
               f"{m['prefix_evictions']} evictions")
+    return eng
 
 
 def run_fixed(args, cfg, model, params, pipe):
@@ -186,9 +189,18 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend a common prefix of this many tokens to "
                          "every trace prompt (prefix-cache-heavy traffic)")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome/Perfetto trace_event JSON of the "
+                         "serving spans (admission, prefill, decode, "
+                         "preemption, COW) to this path")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the last engine's metrics registry in "
+                         "Prometheus text exposition format to this path")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.trace_out:
+        obs_trace.enable()
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -196,9 +208,21 @@ def main():
                                     seq_len=args.prompt_len,
                                     global_batch=args.requests), cfg)
     if args.continuous:
-        run_continuous(args, cfg, model, params, pipe)
+        eng = run_continuous(args, cfg, model, params, pipe)
     else:
         run_fixed(args, cfg, model, params, pipe)
+        eng = None
+    if args.trace_out:
+        n = obs_trace.save(args.trace_out)
+        print(f"wrote {n} trace events to {args.trace_out}")
+    if args.metrics_out:
+        if eng is None:
+            print("--metrics-out needs --continuous (registry lives on the "
+                  "continuous engine); skipped")
+        else:
+            with open(args.metrics_out, "w") as f:
+                f.write(eng.registry.prometheus())
+            print(f"wrote metrics exposition to {args.metrics_out}")
 
 
 if __name__ == "__main__":

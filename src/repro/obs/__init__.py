@@ -1,0 +1,29 @@
+"""Observability: span tracing, typed metrics, numerical-health monitors.
+
+Three zero-dependency pillars (see docs/observability.md):
+
+  * :mod:`repro.obs.trace` — Chrome/Perfetto ``trace_event`` spans around
+    the serving/calibration hot paths (``--trace-out`` on the launchers);
+  * :mod:`repro.obs.metrics` — Counter/Gauge/Histogram registry behind
+    ``ContinuousEngine.metrics()``, with Prometheus exposition and JSON
+    snapshots (``--metrics-out``);
+  * :mod:`repro.obs.numerics` — per-layer R-factor condition monitoring
+    and residual-vs-bound checks (``--numerics-report``).
+"""
+from repro.obs import metrics, numerics, trace
+from repro.obs.metrics import (LATENCY_BUCKETS, Counter, Gauge, Histogram,
+                               Registry, log_buckets)
+from repro.obs.numerics import (LayerHealth, NumericsPolicy,
+                                check_calibration, check_compression,
+                                check_r_factors, format_report,
+                                triangular_cond, worst_level)
+from repro.obs.trace import Tracer
+
+__all__ = [
+    "trace", "metrics", "numerics",
+    "Counter", "Gauge", "Histogram", "Registry", "LATENCY_BUCKETS",
+    "log_buckets",
+    "NumericsPolicy", "LayerHealth", "check_calibration",
+    "check_compression", "check_r_factors", "format_report",
+    "triangular_cond", "worst_level", "Tracer",
+]

@@ -69,6 +69,8 @@ import numpy as np
 
 from repro.models.common import CPU_CTX, ParallelCtx
 from repro.models.transformer import LM, period_specs
+from repro.obs import trace
+from repro.obs.metrics import LATENCY_BUCKETS, Registry
 from repro.serve.paged_cache import BlockPool
 from repro.serve.scheduler import Request, Scheduler
 
@@ -185,11 +187,17 @@ class ContinuousEngine:
             raise ValueError(
                 "prefix caching needs chunked suffix prefill, which this "
                 "model does not support (recurrent/hybrid/enc-dec layers)")
+        # one registry per engine: pool and scheduler register their own
+        # series into it, metrics() is a compatibility view over it, and
+        # launch/serve.py --metrics-out writes its Prometheus exposition
+        self.registry = Registry()
         self.pool = BlockPool(model, num_blocks=num_blocks,
                               block_size=block_size,
                               max_requests=max_running, dtype=cache_dtype,
-                              prefix_cache=self.prefix_cache)
-        self.scheduler = Scheduler(self.pool, max_running=max_running)
+                              prefix_cache=self.prefix_cache,
+                              registry=self.registry)
+        self.scheduler = Scheduler(self.pool, max_running=max_running,
+                                   registry=self.registry)
         # the paged read path needs attention layers that understand page
         # stores: decoder-only/VLM/hybrid LMs with plain GQA K/V caches
         # (MLA keeps latent caches; enc-dec models route through EncDecLM)
@@ -218,14 +226,47 @@ class ContinuousEngine:
         self._start_time: Optional[float] = None
         self._decode_shapes: set = set()
         self._prefill_shapes: set = set()
-        self._decode_time = 0.0              # steady-state (post-compile) ...
-        self._decode_tokens = 0              # ... decode wall time / tokens
-        self._decode_steps = 0
-        self._prefill_batches = 0
-        self._prefill_time = 0.0             # steady-state batched-prefill ...
-        self._prefill_tokens = 0             # ... wall time / suffix tokens
-        self._prompt_tokens = 0              # prefix-cache hit-rate counters
-        self._prefix_hit_tokens = 0
+        # typed registry series replacing the former hand-rolled counter
+        # attributes; the steady-state throughput pairs (tokens + seconds)
+        # exclude steps that compiled a fresh jit signature
+        reg = self.registry
+        self._c_decode_steps = reg.counter(
+            "serve_decode_steps_total", "decode steps run")
+        self._c_decode_tokens = reg.counter(
+            "serve_decode_tokens_total",
+            "steady-state decoded tokens (compile steps excluded)")
+        self._c_decode_seconds = reg.counter(
+            "serve_decode_seconds_total",
+            "steady-state decode wall time (compile steps excluded)")
+        self._c_prefill_batches = reg.counter(
+            "serve_prefill_batches_total", "batched suffix prefill calls")
+        self._c_prefill_tokens = reg.counter(
+            "serve_prefill_tokens_total",
+            "steady-state prefilled suffix tokens (compiles excluded)")
+        self._c_prefill_seconds = reg.counter(
+            "serve_prefill_seconds_total",
+            "steady-state batched-prefill wall time (compiles excluded)")
+        self._c_prompt_tokens = reg.counter(
+            "serve_prompt_tokens_total", "prompt tokens submitted to prefill")
+        self._c_prefix_hit_tokens = reg.counter(
+            "serve_prefix_hit_tokens_total",
+            "prompt tokens satisfied from the prefix cache")
+        self._c_finished = reg.counter(
+            "serve_requests_finished_total", "requests run to completion")
+        self._c_new_tokens = reg.counter(
+            "serve_new_tokens_total", "tokens generated by finished requests")
+        self._h_ttft = reg.histogram(
+            "serve_ttft_seconds", LATENCY_BUCKETS,
+            "arrival -> first generated token")
+        self._h_step = reg.histogram(
+            "serve_decode_step_seconds", LATENCY_BUCKETS,
+            "steady-state decode step wall time (inter-token latency)")
+        reg.gauge("serve_running_requests", "requests in the decode batch",
+                  fn=lambda: len(self.scheduler.running))
+        reg.gauge("serve_decode_compiles", "decode jit cache entries",
+                  fn=self.decode_compile_count)
+        reg.gauge("serve_prefill_compiles", "prefill jit cache entries",
+                  fn=self.prefill_compile_count)
         m, cd = model, compute_dtype
         self._prefill = jax.jit(
             lambda p, tk, c, **kw: m.prefill(p, tk, c, ctx=ctx,
@@ -310,8 +351,8 @@ class ContinuousEngine:
             # suffix length both picks the batch group and feeds the prefill
             toks = req.prefill_tokens()
             cached = self.pool.alloc(req.req_id, len(toks), tokens=toks)
-            self._prompt_tokens += len(toks)
-            self._prefix_hit_tokens += cached
+            self._c_prompt_tokens.inc(len(toks))
+            self._c_prefix_hit_tokens.inc(cached)
             groups.setdefault(
                 self._bucket_prefill(len(toks) - cached),
                 []).append((req, toks, cached))
@@ -319,8 +360,7 @@ class ContinuousEngine:
             self._prefill_batch(group)
         for req in admitted:
             if req.done:
-                self.scheduler.evict(req)
-                self.finished.append(req)
+                self._finish(req)
                 done.append(req)
         running = list(self.scheduler.running)
         if running:
@@ -414,55 +454,62 @@ class ContinuousEngine:
             return len(self._prefill_shapes)
 
     def reset_metrics(self) -> None:
-        """Zero the per-trace counters (finished list, timers, hit-rate
-        accounting) while keeping jit caches and the prefix registry warm —
-        lets benchmarks measure steady-state serving without compile noise."""
+        """Zero everything request-level — the finished list (and with it
+        the TTFT samples), the preemption/queue-wait series, timers, and
+        hit-rate accounting — while keeping jit caches and the prefix
+        registry warm, so steady-state benchmark passes can't leak warmup
+        samples. One call resets the whole registry: engine, scheduler and
+        pool series all live in ``self.registry`` (callback gauges keep
+        reading live state)."""
         self.finished = []
         self._start_time = None
-        self._decode_time = 0.0
-        self._decode_tokens = 0
-        self._decode_steps = 0
-        self._prefill_batches = 0
-        self._prefill_time = 0.0
-        self._prefill_tokens = 0
-        self._prompt_tokens = 0
-        self._prefix_hit_tokens = 0
+        self.registry.reset()
         for k in self.pool.stats:
             self.pool.stats[k] = 0
 
     def metrics(self) -> Dict[str, float]:
-        """Aggregate serving metrics over finished requests."""
+        """Aggregate serving metrics over finished requests — a
+        compatibility view over ``self.registry`` (same keys as before the
+        registry existed; ``registry.snapshot()`` is the superset)."""
         fin = self.finished
+        decode_s = self._c_decode_seconds.value
+        prefill_s = self._c_prefill_seconds.value
         decode = {
             "decode_compiles": self.decode_compile_count(),
             "decode_shapes": len(self._decode_shapes),
-            "decode_steps": self._decode_steps,
+            "decode_steps": int(self._c_decode_steps.value),
             # steady-state decode throughput: steps that compiled a new
-            # (batch, blocks) signature are excluded from the timer
-            "decode_tok_per_s": (self._decode_tokens /
-                                 max(self._decode_time, 1e-9)
-                                 if self._decode_tokens else 0.0),
+            # (batch, blocks) signature are excluded from the timer; a trace
+            # where the timer never accumulated (every step compiled, e.g.
+            # a single-step run) reports 0.0 rather than inf
+            "decode_tok_per_s": (self._c_decode_tokens.value / decode_s
+                                 if decode_s > 0.0 else 0.0),
             "prefill_compiles": self.prefill_compile_count(),
             "prefill_shapes": len(self._prefill_shapes),
-            "prefill_batches": self._prefill_batches,
+            "prefill_batches": int(self._c_prefill_batches.value),
             # steady-state batched suffix-prefill throughput (compiling
-            # signatures excluded), and which read path produced it:
-            # 1.0 = chunked-prefill kernel, 0.0 = gather oracle
-            "prefill_tok_per_s": (self._prefill_tokens /
-                                  max(self._prefill_time, 1e-9)
-                                  if self._prefill_tokens else 0.0),
+            # signatures excluded, 0.0 when nothing ran post-compile), and
+            # which read path produced it: 1.0 = chunked-prefill kernel,
+            # 0.0 = gather oracle
+            "prefill_tok_per_s": (self._c_prefill_tokens.value / prefill_s
+                                  if prefill_s > 0.0 else 0.0),
             "prefill_kernel": float(self.prefill_kernel),
-            "prefix_hit_rate": (self._prefix_hit_tokens /
-                                max(self._prompt_tokens, 1)),
-            "prefix_hit_tokens": self._prefix_hit_tokens,
+            "prefix_hit_rate": (self._c_prefix_hit_tokens.value /
+                                max(self._c_prompt_tokens.value, 1)),
+            "prefix_hit_tokens": int(self._c_prefix_hit_tokens.value),
             "cached_blocks": self.pool.cached_blocks,
-            "cow_copies": self.pool.stats["cow_copies"],
-            "prefix_evictions": self.pool.stats["evictions"],
+            "cow_copies": int(self.registry.get(
+                "pool_cow_copies_total").value),
+            "prefix_evictions": int(self.registry.get(
+                "pool_prefix_evictions_total").value),
+            "queue_depth": len(self.scheduler.waiting),
+            "preemptions": int(self.registry.get(
+                "serve_preemptions_total").value),
         }
         if not fin:
             return {"requests": 0, "requests_per_sec": 0.0, "new_tokens": 0,
                     "tokens_per_sec": 0.0, "mean_ttft_s": float("nan"),
-                    "max_ttft_s": float("nan"), "preemptions": 0, **decode}
+                    "max_ttft_s": float("nan"), **decode}
         ttfts = [r.ttft for r in fin if r.ttft is not None]
         new_tokens = sum(len(r.out_tokens) for r in fin)
         elapsed = max(max(r.finish_time for r in fin) - self._start_time,
@@ -474,11 +521,16 @@ class ContinuousEngine:
             "tokens_per_sec": new_tokens / elapsed,
             "mean_ttft_s": float(np.mean(ttfts)) if ttfts else float("nan"),
             "max_ttft_s": float(np.max(ttfts)) if ttfts else float("nan"),
-            "preemptions": sum(r.preemptions for r in fin),
             **decode,
         }
 
     # ------------------------------------------------------------ internals
+    def _finish(self, req: Request) -> None:
+        self.scheduler.evict(req)
+        self.finished.append(req)
+        self._c_finished.inc()
+        self._c_new_tokens.inc(len(req.out_tokens))
+
     def _bucket_batch(self, n: int) -> int:
         for b in self.bucket_sizes:
             if b >= n:
@@ -506,22 +558,26 @@ class ContinuousEngine:
         return np.asarray(self._sample(logits, temps, keys))[:len(reqs)]
 
     def _prefill_request(self, req: Request) -> None:
-        tokens = req.prefill_tokens()
-        l0 = req.vis_offset + len(tokens)
-        self.pool.alloc(req.req_id, l0)
-        nb = len(self.pool.table(req.req_id))
-        cache = self.model.init_cache(1, nb * self.block_size,
-                                      dtype=self.cache_dtype)
-        kw = dict(req.extras or {})
-        logits, cache = self._prefill(self.params, jnp.asarray(tokens)[None],
-                                      cache, **kw)
-        logits = logits[:, -1] if logits.ndim == 3 else logits
-        self.pool.scatter_prefill([req.req_id], cache, l0)
-        req.cache_len = l0
-        tok = int(self._sample_tokens(logits, [req])[0])
-        req.out_tokens.append(tok)
-        if req.first_token_time is None:
-            req.first_token_time = time.perf_counter()
+        with trace.span("serve.prefill_request", req_id=req.req_id,
+                        tokens=len(req.prompt)):
+            tokens = req.prefill_tokens()
+            l0 = req.vis_offset + len(tokens)
+            self.pool.alloc(req.req_id, l0)
+            nb = len(self.pool.table(req.req_id))
+            cache = self.model.init_cache(1, nb * self.block_size,
+                                          dtype=self.cache_dtype)
+            kw = dict(req.extras or {})
+            logits, cache = self._prefill(self.params,
+                                          jnp.asarray(tokens)[None],
+                                          cache, **kw)
+            logits = logits[:, -1] if logits.ndim == 3 else logits
+            self.pool.scatter_prefill([req.req_id], cache, l0)
+            req.cache_len = l0
+            tok = int(self._sample_tokens(logits, [req])[0])
+            req.out_tokens.append(tok)
+            if req.first_token_time is None:
+                req.first_token_time = time.perf_counter()
+                self._h_ttft.observe(req.ttft)
 
     def _prefill_batch(self, group) -> None:
         """One jitted prefill over a same-bucket group of (request, tokens,
@@ -549,30 +605,36 @@ class ContinuousEngine:
         sig = (b_pad, l_pad, nb_pad)
         fresh = sig not in self._prefill_shapes
         self._prefill_shapes.add(sig)
+        if fresh:
+            trace.instant("serve.prefill_compile", sig=str(sig))
         tok = np.zeros((b_pad, l_pad), np.int32)
         for i, s in enumerate(suffixes):
             tok[i, :len(s)] = s
         pos = jnp.asarray(starts + [0] * (b_pad - len(group)), jnp.int32)
         ln = jnp.asarray(lens + [1] * (b_pad - len(group)), jnp.int32)
         t0 = time.perf_counter()
-        if self.prefill_kernel:
-            tables = self.pool.padded_tables(ids, rows=b_pad, blocks=nb_pad)
-            cache = self.pool.paged_cache(ids, rows=b_pad)
-            logits, cache = self._prefill_chunk_paged(
-                self.params, jnp.asarray(tok), cache, pos, ln, tables)
-            logits = jax.block_until_ready(logits)
-            self.pool.absorb_paged(ids, cache, rows=b_pad)
-        else:
-            cache = self.pool.gather_batch(ids, rows=b_pad, blocks=nb_pad)
-            logits, cache = self._prefill_chunk(self.params, jnp.asarray(tok),
-                                                cache, pos, ln)
-            logits = jax.block_until_ready(logits)
-            self.pool.scatter_suffix(ids, cache, starts, lens, rows=b_pad,
-                                     blocks=nb_pad)
+        with trace.span("serve.prefill_batch", batch=len(group),
+                        tokens=sum(lens), sig=str(sig)):
+            if self.prefill_kernel:
+                tables = self.pool.padded_tables(ids, rows=b_pad,
+                                                 blocks=nb_pad)
+                cache = self.pool.paged_cache(ids, rows=b_pad)
+                logits, cache = self._prefill_chunk_paged(
+                    self.params, jnp.asarray(tok), cache, pos, ln, tables)
+                logits = jax.block_until_ready(logits)
+                self.pool.absorb_paged(ids, cache, rows=b_pad)
+            else:
+                cache = self.pool.gather_batch(ids, rows=b_pad, blocks=nb_pad)
+                logits, cache = self._prefill_chunk(self.params,
+                                                    jnp.asarray(tok),
+                                                    cache, pos, ln)
+                logits = jax.block_until_ready(logits)
+                self.pool.scatter_suffix(ids, cache, starts, lens, rows=b_pad,
+                                         blocks=nb_pad)
         if not fresh:                       # steady-state timer: skip compiles
-            self._prefill_time += time.perf_counter() - t0
-            self._prefill_tokens += sum(lens)
-        self._prefill_batches += 1
+            self._c_prefill_seconds.inc(time.perf_counter() - t0)
+            self._c_prefill_tokens.inc(sum(lens))
+        self._c_prefill_batches.inc()
         nxt = self._sample_tokens(logits, reqs, pad_to=b_pad)
         now = time.perf_counter()
         for r, start, ln_i, t in zip(reqs, starts, lens, nxt):
@@ -580,6 +642,7 @@ class ContinuousEngine:
             r.out_tokens.append(int(t))
             if r.first_token_time is None:
                 r.first_token_time = now
+                self._h_ttft.observe(r.ttft)
             self.pool.commit(r.req_id, r.prefill_tokens()[:r.cache_len])
 
     def _decode_step(self, running: List[Request]) -> List[Request]:
@@ -605,27 +668,32 @@ class ContinuousEngine:
         sig = (b_pad, nb_pad, self.paged_kernel)
         fresh = sig not in self._decode_shapes
         self._decode_shapes.add(sig)
+        if fresh:
+            trace.instant("serve.decode_compile", sig=str(sig))
         tables = self.pool.padded_tables(ids, rows=b_pad, blocks=nb_pad)
         tok = jnp.asarray([[r.out_tokens[-1]] for r in running]
                           + [[0]] * (b_pad - b_real), jnp.int32)
         pos = jnp.asarray([r.cache_len for r in running]
                           + [0] * (b_pad - b_real), jnp.int32)
         t0 = time.perf_counter()
-        if self.paged_kernel:
-            cache = self.pool.paged_cache(ids, rows=b_pad)
-            logits, cache = self._decode_paged(self.params, tok, cache, pos,
-                                               tables)
-            self.pool.absorb_paged(ids, cache, rows=b_pad)
-        else:
-            cache = self.pool.gather_batch(ids, rows=b_pad, blocks=nb_pad)
-            logits, cache = self._decode(self.params, tok, cache, pos)
-            self.pool.scatter_token(ids, cache, pos, rows=b_pad,
-                                    blocks=nb_pad)
-        logits = jax.block_until_ready(logits)
-        self._decode_steps += 1
+        with trace.span("serve.decode_step", batch=b_real, sig=str(sig)):
+            if self.paged_kernel:
+                cache = self.pool.paged_cache(ids, rows=b_pad)
+                logits, cache = self._decode_paged(self.params, tok, cache,
+                                                   pos, tables)
+                self.pool.absorb_paged(ids, cache, rows=b_pad)
+            else:
+                cache = self.pool.gather_batch(ids, rows=b_pad, blocks=nb_pad)
+                logits, cache = self._decode(self.params, tok, cache, pos)
+                self.pool.scatter_token(ids, cache, pos, rows=b_pad,
+                                        blocks=nb_pad)
+            logits = jax.block_until_ready(logits)
+        self._c_decode_steps.inc()
         if not fresh:                       # steady-state timer: skip compiles
-            self._decode_time += time.perf_counter() - t0
-            self._decode_tokens += b_real
+            dt = time.perf_counter() - t0
+            self._c_decode_seconds.inc(dt)
+            self._c_decode_tokens.inc(b_real)
+            self._h_step.observe(dt)
         for r in running:
             r.cache_len += 1
         nxt = self._sample_tokens(logits, running, pad_to=b_pad)
@@ -638,7 +706,6 @@ class ContinuousEngine:
                 # traffic (and this request, if preempted) can reuse it
                 self.pool.commit(r.req_id, r.prefill_tokens()[:r.cache_len])
             if r.done:
-                self.scheduler.evict(r)
-                self.finished.append(r)
+                self._finish(r)
                 done.append(r)
         return done

@@ -66,6 +66,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace
+from repro.obs.metrics import Registry
+
 _ROOT = -1                      # parent id of a prefix chain's first block
 
 
@@ -143,7 +146,7 @@ class BlockPool:
 
     def __init__(self, model, *, num_blocks: int, block_size: int,
                  max_requests: int, dtype=jnp.bfloat16,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, registry=None):
         assert num_blocks >= 2 and block_size >= 1
         self.block_size = block_size
         self.num_blocks = num_blocks
@@ -167,6 +170,19 @@ class BlockPool:
             collections.OrderedDict()           # cached refcount-0 blocks
         self._chain: Dict[int, List[int]] = {}  # req -> prefix ids committed
         self.stats: Dict[str, int] = {"cow_copies": 0, "evictions": 0}
+        # typed mirrors of ``stats`` plus live-occupancy callback gauges;
+        # ``registry`` is the owning engine's (a private one standalone)
+        reg = registry if registry is not None else Registry()
+        self.registry = reg
+        self._c_cow = reg.counter("pool_cow_copies_total",
+                                  "copy-on-write block copies")
+        self._c_evict = reg.counter("pool_prefix_evictions_total",
+                                    "prefix-cache blocks LRU-evicted")
+        reg.gauge("pool_free_blocks", "blocks on the free list",
+                  fn=lambda: len(self._free))
+        reg.gauge("pool_cached_blocks",
+                  "evictable prefix-cache blocks (refcount 0)",
+                  fn=lambda: len(self._lru))
         # pooled token pages + per-request state store (last slot = trash)
         self.token_store = [
             jnp.zeros(_token_store_shape(sp, num_blocks, block_size), dt)
@@ -250,6 +266,8 @@ class BlockPool:
             block, _ = self._lru.popitem(last=False)     # least recently freed
             self._deregister(block)
             self.stats["evictions"] += 1
+            self._c_evict.inc()
+            trace.instant("pool.prefix_evict", block=block)
             return block
         raise MemoryError("block pool exhausted")
 
@@ -384,15 +402,17 @@ class BlockPool:
         blk = table[i]
         if self._ref[blk] <= 1:
             return
-        new = self._take_block()
-        if self.token_store:
-            self.token_store = _copy_block(
-                tuple(self.layout.specs), self.token_store,
-                jnp.int32(blk), jnp.int32(new))
-        self._ref[new] = 1
-        self._decref(blk)
-        table[i] = new
-        self.stats["cow_copies"] += 1
+        with trace.span("pool.cow_copy", req_id=req_id, block=blk):
+            new = self._take_block()
+            if self.token_store:
+                self.token_store = _copy_block(
+                    tuple(self.layout.specs), self.token_store,
+                    jnp.int32(blk), jnp.int32(new))
+            self._ref[new] = 1
+            self._decref(blk)
+            table[i] = new
+            self.stats["cow_copies"] += 1
+            self._c_cow.inc()
 
     def fork(self, parent_id: int, child_id: int) -> None:
         """Share the parent's whole table with ``child_id`` (copy-on-write:

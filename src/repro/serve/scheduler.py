@@ -21,6 +21,9 @@ from typing import Deque, List, Optional
 
 import numpy as np
 
+from repro.obs import trace
+from repro.obs.metrics import LATENCY_BUCKETS, Registry
+
 WAITING = "waiting"
 RUNNING = "running"
 FINISHED = "finished"
@@ -81,12 +84,29 @@ class Request:
 class Scheduler:
     """FIFO admission against pool capacity and a running-slot cap."""
 
-    def __init__(self, pool, max_running: int = 8):
+    def __init__(self, pool, max_running: int = 8,
+                 registry: Optional[Registry] = None):
         self.pool = pool
         self.max_running = max_running
         self.waiting: Deque[Request] = collections.deque()
         self.running: List[Request] = []
         self._admit_seq = 0
+        # queue observability (docs/observability.md): depth reads the live
+        # deque via a callback gauge; wait is observed at admission from the
+        # request's arrival timestamp
+        reg = registry if registry is not None else Registry()
+        self.registry = reg
+        self._g_queue_depth = reg.gauge(
+            "serve_queue_depth", "requests waiting for admission",
+            fn=lambda: len(self.waiting))
+        self._h_queue_wait = reg.histogram(
+            "serve_queue_wait_seconds", LATENCY_BUCKETS,
+            "arrival -> (latest) admission wait")
+        self._c_admitted = reg.counter(
+            "serve_requests_admitted_total",
+            "admissions (re-admission after preemption counts again)")
+        self._c_preemptions = reg.counter(
+            "serve_preemptions_total", "requests preempted under pool pressure")
 
     def submit(self, req: Request) -> None:
         req.state = WAITING
@@ -102,22 +122,28 @@ class Scheduler:
         admit() batch never promises the same blocks twice."""
         admitted = []
         reserved = 0
-        # prefix-cached blocks in the LRU are evictable on demand, so they
-        # count as admissible capacity (a prefix hit needs even less)
-        avail = getattr(self.pool, "available_blocks", self.pool.free_blocks)
-        while self.waiting and len(self.running) < self.max_running:
-            req = self.waiting[0]
-            need = self.pool.blocks_for(req.cache_budget())
-            if (need + reserved > avail
-                    or len(admitted) + 1 > self.pool.free_slots):
-                break
-            reserved += need
-            self.waiting.popleft()
-            req.state = RUNNING
-            req.admit_seq = self._admit_seq
-            self._admit_seq += 1
-            self.running.append(req)
-            admitted.append(req)
+        with trace.span("serve.admit", waiting=len(self.waiting),
+                        running=len(self.running)):
+            # prefix-cached blocks in the LRU are evictable on demand, so
+            # they count as admissible capacity (a hit needs even less)
+            avail = getattr(self.pool, "available_blocks",
+                            self.pool.free_blocks)
+            while self.waiting and len(self.running) < self.max_running:
+                req = self.waiting[0]
+                need = self.pool.blocks_for(req.cache_budget())
+                if (need + reserved > avail
+                        or len(admitted) + 1 > self.pool.free_slots):
+                    break
+                reserved += need
+                self.waiting.popleft()
+                req.state = RUNNING
+                req.admit_seq = self._admit_seq
+                self._admit_seq += 1
+                self.running.append(req)
+                admitted.append(req)
+                self._c_admitted.inc()
+                self._h_queue_wait.observe(
+                    time.perf_counter() - req.arrival_time)
         return admitted
 
     def adopt(self, req: Request) -> None:
@@ -142,10 +168,13 @@ class Scheduler:
         if not self.running:
             return None
         victim = max(self.running, key=lambda r: r.admit_seq)
-        self.pool.free(victim.req_id)
-        self.running.remove(victim)
-        victim.state = WAITING
-        victim.cache_len = 0
-        victim.preemptions += 1
-        self.waiting.appendleft(victim)
+        with trace.span("serve.preempt", req_id=victim.req_id,
+                        generated=len(victim.out_tokens)):
+            self.pool.free(victim.req_id)
+            self.running.remove(victim)
+            victim.state = WAITING
+            victim.cache_len = 0
+            victim.preemptions += 1
+            self._c_preemptions.inc()
+            self.waiting.appendleft(victim)
         return victim

@@ -1,0 +1,514 @@
+"""Observability subsystem: tracer, metrics registry, numerics monitors,
+and their wiring through the serving engine.
+
+Covers the PR-6 contracts:
+  * trace validity — emitted JSON parses as Chrome/Perfetto trace_event,
+    spans nest strictly per thread, compile instants present;
+  * golden-key schemas — ``engine.metrics()`` and ``registry.snapshot()``
+    key sets are frozen so BENCH_serve.json rows can't drift silently;
+  * zero-elapsed guards — ``decode_tok_per_s``/``prefill_tok_per_s`` report
+    0.0 (not inf) when the steady-state timers never accumulated;
+  * ``reset_metrics()`` resets every request-level series (TTFT samples,
+    preemption counter, queue-wait histogram) with the registry;
+  * queue observability under pool pressure — preemption counter,
+    queue-wait histogram and queue-depth gauge move;
+  * numerics — the cond monitor flags the cond=1e9 fixture from
+    test_dist_calibrate while staying silent on well-conditioned layers,
+    single-device and sharded (subprocess with 8 fake devices).
+"""
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.obs import metrics, numerics, trace
+from repro.serve import ContinuousEngine
+
+from test_dist_calibrate import run_with_devices
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = get_smoke_config("smollm_135m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(autouse=True)
+def _tracing_off():
+    """Every test starts and ends with the process tracer uninstalled."""
+    trace.disable()
+    yield
+    trace.disable()
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("compute_dtype", jnp.float32)
+    kw.setdefault("cache_dtype", jnp.float32)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("num_blocks", 64)
+    kw.setdefault("max_running", 4)
+    return ContinuousEngine(model, params, **kw)
+
+
+def _prompt(cfg, n, seed=0):
+    rng = np.random.RandomState(seed)
+    return rng.randint(0, cfg.vocab_size, (n,)).astype(np.int32)
+
+
+def _ill_conditioned_r(n=16, k=64, cond=1e9, seed=0):
+    """Upper-triangular R of an (k, n) X with the given condition number —
+    the same logspace-singular-value fixture test_dist_calibrate uses."""
+    rng = np.random.RandomState(seed)
+    u, _ = np.linalg.qr(rng.standard_normal((k, n)))
+    v, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    s = np.logspace(0, -np.log10(cond), n)
+    x = u @ np.diag(s) @ v.T
+    return np.linalg.qr(x, mode="r").astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Tracer
+# ---------------------------------------------------------------------------
+
+class TestTracer:
+    def test_disabled_is_shared_noop(self):
+        assert not trace.enabled()
+        assert trace.span("a") is trace.span("b", x=1)
+        trace.instant("nothing")                 # no-op, no error
+        assert trace.save("/tmp/unused.json") == 0
+
+    def test_span_and_instant_events(self, tmp_path):
+        trace.enable()
+        with trace.span("outer", a=1):
+            with trace.span("inner"):
+                pass
+            trace.instant("tick", s=2)
+        path = tmp_path / "t.json"
+        assert trace.save(str(path)) == 3
+        doc = json.loads(path.read_text())
+        evs = [e for e in doc["traceEvents"] if e.get("ph") != "M"]
+        by_name = {e["name"]: e for e in evs}
+        assert by_name["inner"]["ph"] == "X"
+        assert by_name["tick"]["ph"] == "i"
+        # inner completes before outer and lies inside it
+        out, inn = by_name["outer"], by_name["inner"]
+        assert out["ts"] <= inn["ts"]
+        assert inn["ts"] + inn["dur"] <= out["ts"] + out["dur"] + 1e-6
+        assert out["args"] == {"a": 1}
+
+    def test_thread_safety_and_per_thread_tids(self):
+        t = trace.enable()
+
+        barrier = threading.Barrier(4)     # idents are reused after a
+                                           # thread exits; keep all 4 alive
+
+        def work(i):
+            barrier.wait()
+            for _ in range(50):
+                with trace.span(f"w{i}"):
+                    pass
+
+        threads = [threading.Thread(target=work, args=(i,)) for i in range(4)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        evs = t.events()
+        assert len(evs) == 200
+        assert len({e["tid"] for e in evs}) == 4
+
+    def test_enable_idempotent_disable_drops(self):
+        t1 = trace.enable()
+        t2 = trace.enable()
+        assert t1 is t2 and trace.current() is t1
+        trace.disable()
+        assert trace.current() is None
+
+
+def _nesting_ok(events):
+    """Per-tid, complete events must nest like a call stack: sorted by
+    start, each next span either starts after the top ends (pop) or lies
+    entirely inside it (push)."""
+    by_tid = {}
+    for e in events:
+        if e.get("ph") == "X":
+            by_tid.setdefault(e["tid"], []).append(e)
+    for evs in by_tid.values():
+        evs.sort(key=lambda e: (e["ts"], -e["dur"]))
+        stack = []
+        for e in evs:
+            while stack and e["ts"] >= stack[-1]["ts"] + stack[-1]["dur"]:
+                stack.pop()
+            if stack and e["ts"] + e["dur"] > \
+                    stack[-1]["ts"] + stack[-1]["dur"] + 1e-3:
+                return False                     # overlap without containment
+            stack.append(e)
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_counter_gauge_histogram(self):
+        reg = metrics.Registry()
+        c = reg.counter("x_total")
+        c.inc(); c.inc(2.5)
+        assert c.value == 3.5
+        with pytest.raises(ValueError):
+            c.inc(-1)
+        g = reg.gauge("depth", fn=lambda: 42)
+        assert g.value == 42
+        with pytest.raises(ValueError):
+            g.set(3)                             # callback-backed
+        h = reg.histogram("lat_seconds", buckets=(0.01, 0.1, 1.0))
+        for v in (0.005, 0.05, 0.5, 5.0):
+            h.observe(v)
+        assert h.count == 4 and h.max == 5.0
+        assert h.quantile(0.5) == 0.1
+        assert h.quantile(1.0) == 5.0            # overflow capped at max
+
+    def test_strict_registration(self):
+        reg = metrics.Registry()
+        reg.counter("a_total")
+        with pytest.raises(ValueError):
+            reg.counter("a_total")               # duplicate
+        with pytest.raises(ValueError):
+            reg.gauge("bad name")                # illegal chars
+        with pytest.raises(ValueError):
+            reg.histogram("h", buckets=(1.0, 0.5))   # not increasing
+
+    def test_log_buckets(self):
+        b = metrics.log_buckets(1e-3, 1.0, per_decade=1)
+        assert b[0] == pytest.approx(1e-3)
+        assert b[-1] >= 1.0
+        assert all(y > x for x, y in zip(b, b[1:]))
+
+    def test_snapshot_and_reset(self):
+        reg = metrics.Registry()
+        c = reg.counter("n_total")
+        h = reg.histogram("t_seconds", buckets=(1.0, 10.0))
+        g = reg.gauge("live", fn=lambda: 7)
+        c.inc(3); h.observe(0.5)
+        snap = reg.snapshot()
+        assert snap["n_total"] == 3
+        assert snap["t_seconds_count"] == 1
+        assert snap["live"] == 7
+        reg.reset()
+        snap = reg.snapshot()
+        assert snap["n_total"] == 0 and snap["t_seconds_count"] == 0
+        assert snap["live"] == 7                 # callback gauges read live
+
+    def test_prometheus_exposition_lints_clean(self):
+        import os
+        import sys
+        sys.path.insert(0, os.path.join(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))), "tools"))
+        from check_prom import lint
+        reg = metrics.Registry()
+        reg.counter("req_total", "requests").inc(5)
+        reg.gauge("depth", "queue depth").set(2)
+        h = reg.histogram("lat_seconds", buckets=(0.1, 1.0), help="latency")
+        h.observe(0.05); h.observe(3.0)
+        text = reg.prometheus()
+        assert lint(text) == []
+        assert 'lat_seconds_bucket{le="+Inf"} 2' in text
+        assert "# TYPE req_total counter" in text
+
+
+# ---------------------------------------------------------------------------
+# Engine wiring: schemas, guards, reset, queue observability, trace spans
+# ---------------------------------------------------------------------------
+
+# frozen compatibility schema of engine.metrics() — BENCH_serve.json rows
+# read these keys; extend deliberately, never let them drift silently
+METRICS_KEYS = {
+    "requests", "requests_per_sec", "new_tokens", "tokens_per_sec",
+    "mean_ttft_s", "max_ttft_s", "preemptions",
+    "decode_compiles", "decode_shapes", "decode_steps", "decode_tok_per_s",
+    "prefill_compiles", "prefill_shapes", "prefill_batches",
+    "prefill_tok_per_s", "prefill_kernel",
+    "prefix_hit_rate", "prefix_hit_tokens", "cached_blocks",
+    "cow_copies", "prefix_evictions", "queue_depth",
+}
+
+# frozen registry series names (snapshot() expands histograms with these
+# suffixes: _count/_sum/_mean/_p50/_p99/_max)
+REGISTRY_NAMES = {
+    "serve_decode_steps_total", "serve_decode_tokens_total",
+    "serve_decode_seconds_total", "serve_prefill_batches_total",
+    "serve_prefill_tokens_total", "serve_prefill_seconds_total",
+    "serve_prompt_tokens_total", "serve_prefix_hit_tokens_total",
+    "serve_requests_finished_total", "serve_new_tokens_total",
+    "serve_ttft_seconds", "serve_decode_step_seconds",
+    "serve_running_requests", "serve_decode_compiles",
+    "serve_prefill_compiles",
+    "serve_queue_depth", "serve_queue_wait_seconds",
+    "serve_requests_admitted_total", "serve_preemptions_total",
+    "pool_cow_copies_total", "pool_prefix_evictions_total",
+    "pool_free_blocks", "pool_cached_blocks",
+}
+
+
+class TestEngineWiring:
+    def test_metrics_golden_keys(self, smollm):
+        cfg, model, params = smollm
+        eng = _engine(model, params)
+        assert set(eng.metrics()) == METRICS_KEYS       # empty engine
+        eng.submit(_prompt(cfg, 6), 3)
+        while eng.has_work():
+            eng.step()
+        assert set(eng.metrics()) == METRICS_KEYS       # after serving
+
+    def test_registry_golden_names(self, smollm):
+        _, model, params = smollm
+        eng = _engine(model, params)
+        assert set(eng.registry.names()) == REGISTRY_NAMES
+        hist_names = {n for n in REGISTRY_NAMES
+                      if isinstance(eng.registry.get(n), metrics.Histogram)}
+        snap = eng.registry.snapshot()
+        expect = (REGISTRY_NAMES - hist_names) | {
+            f"{n}{suf}" for n in hist_names
+            for suf in ("_count", "_sum", "_mean", "_p50", "_p99", "_max")}
+        assert set(snap) == expect
+
+    def test_zero_elapsed_rates_are_zero(self, smollm):
+        """A single-step trace compiles on every step, so the steady-state
+        timers never accumulate — rates must report 0.0, not inf."""
+        cfg, model, params = smollm
+        eng = _engine(model, params)
+        eng.submit(_prompt(cfg, 6), 2)
+        eng.step()                                # prefill + 1st decode: all
+        m = eng.metrics()                         # signatures fresh
+        assert m["decode_tok_per_s"] == 0.0
+        assert m["prefill_tok_per_s"] == 0.0
+        assert np.isfinite(m["decode_tok_per_s"])
+        # prometheus exposition must stay float-clean too
+        assert "inf" not in eng.registry.prometheus()
+
+    def test_reset_metrics_resets_request_level_stats(self, smollm):
+        cfg, model, params = smollm
+        eng = _engine(model, params)
+        for i in range(3):
+            eng.submit(_prompt(cfg, 6, seed=i), 4)
+        while eng.has_work():
+            eng.step()
+        assert eng.metrics()["requests"] == 3
+        assert eng.registry.get("serve_ttft_seconds").count == 3
+        eng.reset_metrics()
+        m = eng.metrics()
+        assert m["requests"] == 0
+        assert m["preemptions"] == 0
+        assert np.isnan(m["mean_ttft_s"])         # TTFT samples gone
+        snap = eng.registry.snapshot()
+        assert snap["serve_ttft_seconds_count"] == 0
+        assert snap["serve_queue_wait_seconds_count"] == 0
+        assert snap["serve_requests_finished_total"] == 0
+        # shape caches stay warm: reset is for steady-state benching
+        assert eng.metrics()["decode_shapes"] > 0
+
+    def test_queue_observability_under_pool_pressure(self, smollm):
+        """A pool too small for the full load: requests queue (depth gauge,
+        wait histogram) and the running set preempts (counter)."""
+        cfg, model, params = smollm
+        eng = _engine(model, params, block_size=2, num_blocks=9,
+                      max_running=3)
+        for i in range(4):
+            eng.submit(_prompt(cfg, 4, seed=i), 6)
+        # before any step everything waits: the live gauge reads the queue
+        assert eng.registry.get("serve_queue_depth").value == 4
+        assert eng.metrics()["queue_depth"] == 4
+        depth_seen = []
+        while eng.has_work():
+            eng.step()
+            depth_seen.append(eng.registry.get("serve_queue_depth").value)
+        m = eng.metrics()
+        assert m["requests"] == 4
+        assert m["preemptions"] >= 1
+        assert eng.registry.get("serve_preemptions_total").value >= 1
+        # every admission (including re-admissions) observed a queue wait
+        qw = eng.registry.get("serve_queue_wait_seconds")
+        assert qw.count == \
+            eng.registry.get("serve_requests_admitted_total").value
+        assert qw.count >= 4 + m["preemptions"]
+        assert qw.max > 0.0
+        assert depth_seen[-1] == 0                # drained
+
+    def test_trace_validity_over_served_load(self, smollm, tmp_path):
+        """Serve a real mixed load with tracing on: the JSON parses, the
+        expected span taxonomy is present, compile instants fire, and spans
+        nest stack-like per thread."""
+        cfg, model, params = smollm
+        trace.enable()
+        eng = _engine(model, params)
+        for i in range(3):
+            eng.submit(_prompt(cfg, 5 + 3 * i, seed=i), 4)
+        while eng.has_work():
+            eng.step()
+        path = tmp_path / "serve_trace.json"
+        n = trace.save(str(path))
+        assert n > 0
+        doc = json.loads(path.read_text())
+        assert doc["displayTimeUnit"] == "ms"
+        evs = doc["traceEvents"]
+        names = {e["name"] for e in evs}
+        assert {"serve.admit", "serve.prefill_batch",
+                "serve.decode_step"} <= names
+        assert "serve.decode_compile" in names    # instant events
+        for e in evs:
+            assert e["ph"] in ("X", "i", "M")
+            if e["ph"] == "X":
+                assert e["dur"] >= 0 and "tid" in e
+        assert _nesting_ok(evs)
+
+    def test_tracing_off_leaves_no_events(self, smollm):
+        cfg, model, params = smollm
+        eng = _engine(model, params)
+        eng.submit(_prompt(cfg, 6), 2)
+        while eng.has_work():
+            eng.step()
+        assert not trace.enabled()
+        assert trace.save("/tmp/unused.json") == 0
+
+
+# ---------------------------------------------------------------------------
+# Numerics monitors
+# ---------------------------------------------------------------------------
+
+class TestNumerics:
+    def test_flags_ill_conditioned_silent_on_well_conditioned(self):
+        rs = {"bad": _ill_conditioned_r(cond=1e9),
+              "good": _ill_conditioned_r(cond=1e3, seed=1),
+              "warn": _ill_conditioned_r(cond=3e6, seed=2)}
+        tokens = {p: 64 for p in rs}
+        by = {h.path: h for h in numerics.check_r_factors(rs, tokens)}
+        assert by["bad"].level == "fail"
+        assert 1e8 < by["bad"].cond < 1e11     # cond1 within ~n of cond2
+        assert by["good"].level == "ok" and not by["good"].reasons
+        assert by["warn"].level == "warn"
+        assert numerics.worst_level(list(by.values())) == "fail"
+
+    def test_insufficient_data_flagged(self):
+        r = _ill_conditioned_r(n=16, k=64, cond=1e2)
+        by = {h.path: h
+              for h in numerics.check_r_factors({"x": r}, {"x": 8})}
+        assert by["x"].level in ("warn", "fail")
+        assert any("insufficient data" in r for r in by["x"].reasons)
+
+    def test_singular_r_is_inf_and_fails(self):
+        r = np.triu(np.ones((8, 8), np.float32))
+        r[3, 3] = 0.0                             # rank-deficient
+        assert numerics.triangular_cond(r) == float("inf")
+        h = numerics.check_r_factors({"x": r})[0]
+        assert h.level == "fail"
+
+    def test_triangular_cond_matches_dense_estimate(self):
+        r = _ill_conditioned_r(n=12, k=48, cond=1e4, seed=3)
+        est = numerics.triangular_cond(r)
+        ref = np.linalg.cond(r, p=1)
+        assert est == pytest.approx(ref, rel=1e-3)
+
+    def test_calibrator_duck_type(self, smollm):
+        cfg, model, params = smollm
+        from repro.core.calibrate import calibrate_model
+        from repro.data import DataConfig, TokenPipeline
+        pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                        seq_len=32, global_batch=4), cfg)
+        cal = calibrate_model(model, params, [pipe.get_batch(0)])
+        healths = numerics.check_calibration(cal)
+        assert healths and all(h.tokens is not None for h in healths)
+        report = numerics.format_report(healths)
+        assert "layers checked" in report
+
+    def test_residual_vs_bound_grading(self):
+        class Rep:
+            def __init__(self, path, res, bound):
+                self.path = path
+                self.rel_err_weighted = res
+                self.rel_err_bound = bound
+        reports = [Rep("tight", 0.105, 0.10),     # 1.05x: ok
+                   Rep("loose", 0.5, 0.10),       # 5x: warn
+                   Rep("broken", 2.0, 0.10),      # 20x: fail
+                   Rep("no_rf", float("nan"), float("nan"))]
+        by = {h.path: h for h in numerics.check_compression(reports)}
+        assert set(by) == {"tight", "loose", "broken"}   # nan skipped
+        assert by["tight"].level == "ok"
+        assert by["loose"].level == "warn"
+        assert by["broken"].level == "fail"
+
+    def test_compress_reports_carry_bound(self, smollm):
+        """compress_params emits rel_err_bound <= rel_err_weighted (the
+        bound is the attainable optimum) and finite for calibrated layers."""
+        cfg, model, params = smollm
+        from repro.config import CompressConfig
+        from repro.core.calibrate import calibrate_model
+        from repro.core.compress import compress_model
+        from repro.data import DataConfig, TokenPipeline
+        pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                        seq_len=32, global_batch=4), cfg)
+        cal = calibrate_model(model, params, [pipe.get_batch(0)])
+        _, reports = compress_model(
+            model, params, cal,
+            CompressConfig(method="coala", ratio=0.6, lam=4.0, mu=-1.0))
+        assert reports
+        for rep in reports:
+            assert np.isfinite(rep.rel_err_bound)
+            assert rep.rel_err_bound <= rep.rel_err_weighted * (1 + 1e-4)
+
+    def test_sharded_calibration_monitor_parity(self):
+        """The cond monitor must reach the same verdicts through the
+        sharded butterfly-reduce path as single-device: ill-conditioned
+        synthetic activations flagged, well-conditioned silent — on the
+        cond=1e9 fixture from test_dist_calibrate."""
+        out = run_with_devices("""
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.core.calibrate import Calibrator
+            from repro.dist.calibrate import ShardedCalibration, \\
+                combine_r_shards
+            from repro.core.tsqr import square_r
+            from repro.obs import numerics
+
+            def x_with_cond(n, k, cond, seed):
+                rng = np.random.RandomState(seed)
+                u, _ = np.linalg.qr(rng.standard_normal((k, n)))
+                v, _ = np.linalg.qr(rng.standard_normal((n, n)))
+                s = np.logspace(0, -np.log10(cond), n)
+                return (u @ np.diag(s) @ v.T).astype(np.float32)
+
+            n, k, shards = 16, 512, 8
+            mesh = jax.make_mesh((shards,), ("data",),
+                                 devices=jax.devices()[:shards],
+                                 axis_types=(jax.sharding.AxisType.Auto,))
+            cases = {"bad": 1e9, "good": 1e3}
+            factors, tokens = {}, {}
+            single = Calibrator()
+            for seed, (path, cond) in enumerate(cases.items()):
+                x = x_with_cond(n, k, cond, seed=seed)
+                single.record(path, jnp.asarray(x))
+                per = k // shards
+                locs = []
+                for s_i in range(shards):
+                    c = Calibrator()
+                    c.record(path, jnp.asarray(x[s_i*per:(s_i+1)*per]))
+                    locs.append(square_r(c.streams[path].r))
+                factors[path] = combine_r_shards(jnp.stack(locs), mesh)
+                tokens[path] = k
+            sharded = ShardedCalibration(factors=factors, tokens=tokens,
+                                         n_shards=shards)
+            for name, cal in (("single", single), ("sharded", sharded)):
+                by = {h.path: h for h in numerics.check_calibration(cal)}
+                assert by["bad"].level == "fail", (name, by["bad"])
+                assert by["good"].level == "ok", (name, by["good"])
+                print(name, "bad=%.3e" % by["bad"].cond,
+                      "good=%.3e" % by["good"].cond)
+            print("MONITOR_PARITY_OK")
+        """)
+        assert "MONITOR_PARITY_OK" in out

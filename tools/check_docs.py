@@ -16,6 +16,9 @@ Checks:
      src/repro/launch/compress.py (--mesh, --coordinator, --process-id,
      --num-processes, --grad-compress, ...) appears literally in
      docs/distributed.md.
+  5. Every observability flag in src/repro/launch/serve.py and
+     src/repro/launch/compress.py (--trace-out, --metrics-out,
+     --numerics-report) appears literally in docs/observability.md.
 """
 from __future__ import annotations
 
@@ -112,6 +115,32 @@ def check_dist_flags() -> list:
     return errors
 
 
+# every observability flag a launcher grows must be documented in
+# docs/observability.md — keep in sync with the obs-subsystem flag
+# vocabulary (tracing, metrics export, numerics reports)
+OBS_FLAG_RE = re.compile(r"trace-out|metrics-out|numerics")
+
+
+def check_obs_flags() -> list:
+    obs_md = ROOT / "docs" / "observability.md"
+    if not obs_md.exists():
+        return ["docs/observability.md is missing"]
+    doc = obs_md.read_text()
+    errors = []
+    found_any = False
+    for launcher in ("serve.py", "compress.py"):
+        src = ROOT / "src" / "repro" / "launch" / launcher
+        flags = [f for f in FLAG_RE.findall(src.read_text())
+                 if OBS_FLAG_RE.search(f)]
+        found_any = found_any or bool(flags)
+        errors += [f"docs/observability.md: undocumented launch/{launcher} "
+                   f"obs flag {f}" for f in flags if f not in doc]
+    if not found_any:
+        errors.append("no observability argparse flags found in "
+                      "launch/serve.py or launch/compress.py (regex drift?)")
+    return errors
+
+
 def main() -> int:
     md_files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
     missing = [m for m in md_files if not m.exists()]
@@ -119,11 +148,12 @@ def main() -> int:
     errors += check_links([m for m in md_files if m.exists()])
     errors += check_serve_flags()
     errors += check_dist_flags()
+    errors += check_obs_flags()
     for e in errors:
         print(f"ERROR: {e}")
     if not errors:
         print(f"docs OK: {len(md_files)} files, all links/anchors resolve, "
-              "all serving + mesh flags documented")
+              "all serving + mesh + observability flags documented")
     return 1 if errors else 0
 
 

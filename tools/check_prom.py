@@ -1,0 +1,167 @@
+#!/usr/bin/env python3
+"""Lint a Prometheus text-exposition file (format 0.0.4).
+
+CI runs this over the ``--metrics-out`` file the serve smoke writes, so a
+malformed exposition fails the fast tier instead of silently producing an
+unscrapeable artifact. Importable: ``lint(text)`` returns a list of error
+strings (empty = clean); the CLI exits non-zero and prints them.
+
+Checks:
+  * every non-comment line is ``name[{labels}] value`` with a legal metric
+    name and a parseable float value;
+  * ``# TYPE`` lines name a known type and precede their metric's samples;
+  * no metric is TYPE-declared twice;
+  * counters end in ``_total``;
+  * histograms expose ``_bucket`` samples with non-decreasing cumulative
+    counts, a ``+Inf`` bucket, and ``_sum``/``_count`` samples where
+    ``_count`` equals the ``+Inf`` bucket.
+
+Usage: python tools/check_prom.py METRICS_serve.prom
+"""
+from __future__ import annotations
+
+import math
+import re
+import sys
+from typing import Dict, List
+
+NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?"
+    r"\s+(?P<value>\S+)(?:\s+\d+)?$")
+LABEL_RE = re.compile(r'^[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*"$')
+TYPES = {"counter", "gauge", "histogram", "summary", "untyped"}
+
+
+def _parse_value(raw: str) -> float:
+    if raw == "+Inf":
+        return math.inf
+    if raw == "-Inf":
+        return -math.inf
+    return float(raw)
+
+
+def lint(text: str) -> List[str]:
+    errors: List[str] = []
+    types: Dict[str, str] = {}
+    seen_samples: set = set()
+    # histogram bookkeeping: name -> {"buckets": [(le, cum)], "sum": bool,
+    #                                 "count": value}
+    hists: Dict[str, dict] = {}
+
+    def base_of(sample: str) -> str:
+        for suf in ("_bucket", "_sum", "_count"):
+            if sample.endswith(suf) and sample[: -len(suf)] in types:
+                return sample[: -len(suf)]
+        return sample
+
+    for ln, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# HELP "):
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4:
+                errors.append(f"line {ln}: malformed TYPE line: {line!r}")
+                continue
+            _, _, name, mtype = parts
+            if not NAME_RE.match(name):
+                errors.append(f"line {ln}: bad metric name {name!r}")
+            if mtype not in TYPES:
+                errors.append(f"line {ln}: unknown type {mtype!r}")
+            if name in types:
+                errors.append(f"line {ln}: duplicate TYPE for {name!r}")
+            types[name] = mtype
+            if mtype == "counter" and not name.endswith("_total"):
+                errors.append(
+                    f"line {ln}: counter {name!r} should end in _total")
+            if mtype == "histogram":
+                hists[name] = {"buckets": [], "sum": False, "count": None}
+            continue
+        if line.startswith("#"):
+            continue
+        m = SAMPLE_RE.match(line)
+        if not m:
+            errors.append(f"line {ln}: unparseable sample: {line!r}")
+            continue
+        name, labels, raw = m["name"], m["labels"], m["value"]
+        try:
+            value = _parse_value(raw)
+        except ValueError:
+            errors.append(f"line {ln}: bad value {raw!r} for {name!r}")
+            continue
+        if labels:
+            for lab in labels.split(","):
+                if not LABEL_RE.match(lab.strip()):
+                    errors.append(f"line {ln}: bad label {lab.strip()!r}")
+        base = base_of(name)
+        if base not in types:
+            errors.append(f"line {ln}: sample {name!r} has no TYPE line")
+        key = (name, labels or "")
+        if key in seen_samples:
+            errors.append(f"line {ln}: duplicate sample {name!r}"
+                          f"{{{labels or ''}}}")
+        seen_samples.add(key)
+        if base in hists:
+            h = hists[base]
+            if name == f"{base}_bucket":
+                le = dict(
+                    lab.strip().split("=", 1)
+                    for lab in (labels or "").split(",") if "=" in lab
+                ).get("le", "").strip('"')
+                try:
+                    h["buckets"].append((_parse_value(le), value))
+                except ValueError:
+                    errors.append(f"line {ln}: bucket of {base!r} has bad "
+                                  f"le={le!r}")
+            elif name == f"{base}_sum":
+                h["sum"] = True
+            elif name == f"{base}_count":
+                h["count"] = value
+            elif name == base:
+                errors.append(f"line {ln}: histogram {base!r} has a bare "
+                              f"sample (expected _bucket/_sum/_count)")
+
+    for name, h in hists.items():
+        if not h["buckets"]:
+            errors.append(f"histogram {name!r}: no _bucket samples")
+            continue
+        les = [le for le, _ in h["buckets"]]
+        cums = [c for _, c in h["buckets"]]
+        if les != sorted(les):
+            errors.append(f"histogram {name!r}: le bounds not increasing")
+        if any(b < a for a, b in zip(cums, cums[1:])):
+            errors.append(
+                f"histogram {name!r}: cumulative bucket counts decrease")
+        if not les or les[-1] != math.inf:
+            errors.append(f"histogram {name!r}: missing +Inf bucket")
+        if not h["sum"]:
+            errors.append(f"histogram {name!r}: missing _sum")
+        if h["count"] is None:
+            errors.append(f"histogram {name!r}: missing _count")
+        elif les and les[-1] == math.inf and h["count"] != cums[-1]:
+            errors.append(f"histogram {name!r}: _count {h['count']} != "
+                          f"+Inf bucket {cums[-1]}")
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    with open(argv[1]) as f:
+        text = f.read()
+    errors = lint(text)
+    for e in errors:
+        print(f"check_prom: {argv[1]}: {e}", file=sys.stderr)
+    if not errors:
+        n = len([l for l in text.splitlines()
+                 if l.strip() and not l.startswith("#")])
+        print(f"check_prom: {argv[1]}: OK ({n} samples)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
