@@ -442,6 +442,46 @@ def bench_serving():
          "chunked-prefill kernel vs gather oracle suffix tok/s; "
          "acceptance: >= 1.0")
 
+    # warm start: an AOT-warmed engine vs a cold one on the same trace.
+    # The config is deliberately tight (2 batch buckets, one prefill length
+    # bucket, no prefix cache) so warmup() compiles a handful of signatures
+    # rather than the full production cross-product — the claim is the
+    # invariant (first-request TTFT at steady state, zero post-warmup
+    # compiles), not warmup wall time. The offline row reuses the warmed
+    # engine: the length-sorted batch lane's aggregate new tok/s.
+    wtrace = synthetic_trace(6 if SMOKE else 10, cfg.vocab_size, min_prompt=4,
+                             max_prompt=14, max_new=8, arrival_every=2,
+                             seed=13)
+    warm_len = max(len(p) + nn for _, p, nn in wtrace)
+    wkw = dict(compute_dtype=jnp.float32, cache_dtype=jnp.float32,
+               block_size=8, num_blocks=40, max_running=2,
+               bucket_sizes=(1, 2), prefill_bucket_sizes=(32,),
+               prefix_cache=False)
+
+    def first_ttft(eng):
+        return min(eng.finished, key=lambda r: r.req_id).ttft
+
+    cold = ContinuousEngine(model, params, **wkw)
+    serve_trace(cold, wtrace)
+    _row("serve/cold_ttft_ms", f"{first_ttft(cold) * 1e3:.1f}",
+         "first request on a cold engine (pays jit compiles)")
+    warm = ContinuousEngine(model, params, **wkw)
+    w = warm.warmup(max_len=warm_len)
+    m = serve_trace(warm, wtrace)
+    _row("serve/warm_ttft_ms", f"{first_ttft(warm) * 1e3:.1f}",
+         "first request after warmup(); acceptance: < cold_ttft_ms")
+    _row("serve/warmup_seconds", f"{w['warmup_seconds']:.2f}",
+         f"{int(w['decode_signatures'])} decode + "
+         f"{int(w['prefill_signatures'])} prefill signatures")
+    _row("serve/post_warmup_compiles", m["post_warmup_compiles"],
+         "acceptance: == 0 (every signature traffic hit was pre-compiled)")
+    warm.reset_metrics()
+    off_reqs = [(p, nn) for _, p, nn in wtrace]
+    warm.run_offline(off_reqs)
+    mo = warm.metrics()
+    _row("serve/offline_tok_per_s", f"{mo['tokens_per_sec']:.2f}",
+         "run_offline on the warmed engine: length-sorted, packed prefills")
+
     # observability overhead: the same paged-path trace with span tracing
     # enabled vs disabled (the metrics registry is always on — counters are
     # plain attribute adds — so the delta is the tracing hot-path cost).
@@ -619,13 +659,28 @@ def main() -> None:
     if unknown:
         ap.error(f"unknown benchmarks {unknown}; choose from {list(ALL)}")
     print("name,value,notes")
+    # a suite that raises or emits zero rows fails the run (after every
+    # requested suite has had its turn) — a hollow BENCH_*.json artifact
+    # must never reach the perf gate looking like a green result
+    errors: dict = {}
     for n in names:
-        ALL[n]()
+        before = len(ROWS)
+        try:
+            ALL[n]()
+        except Exception as e:                          # noqa: BLE001
+            errors[n] = f"{type(e).__name__}: {e}"
+            print(f"# ERROR {n}: {errors[n]}", flush=True)
+        else:
+            if len(ROWS) == before:
+                errors[n] = "emitted no rows"
+                print(f"# ERROR {n}: emitted no rows", flush=True)
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"benchmarks": names, "smoke": SMOKE, "rows": ROWS},
-                      f, indent=1)
+            json.dump({"benchmarks": names, "smoke": SMOKE, "rows": ROWS,
+                       "errors": errors}, f, indent=1)
         print(f"# wrote {args.json} ({len(ROWS)} rows)", flush=True)
+    if errors:
+        raise SystemExit(f"benchmark suites failed: {sorted(errors)}")
 
 
 if __name__ == "__main__":

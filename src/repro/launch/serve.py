@@ -92,6 +92,8 @@ def run_continuous(args, cfg, model, params, pipe):
     paged = tristate[args.paged_kernel]
     prefix = tristate[args.prefix_cache]
     prefill = tristate[args.prefill_kernel]
+    # warm for exactly the worst per-request cache need this trace can hit
+    warm_len = max(len(p) + nn for _, p, nn in trace)
     eng = None
     for name, p in (("dense", params), ("coala", cparams)):
         eng = ContinuousEngine(model, p, compute_dtype=jnp.float32,
@@ -104,21 +106,38 @@ def run_continuous(args, cfg, model, params, pipe):
                                bucket_sizes=_parse_buckets(args.bucket_sizes),
                                prefix_cache=prefix,
                                prefill_bucket_sizes=_parse_buckets(
-                                   args.prefill_bucket_sizes))
-        m = serve_trace(eng, trace, temperature=args.temperature)
+                                   args.prefill_bucket_sizes),
+                               async_detok=args.detok_async == "on")
+        if args.warmup == "on":
+            w = eng.warmup(max_len=warm_len)
+            print(f"[{name}] warmup: {w['warmup_seconds']:.2f}s for "
+                  f"{int(w['decode_signatures'])} decode + "
+                  f"{int(w['prefill_signatures'])} prefill signatures "
+                  f"(max_len {int(w['max_len'])})")
+        if args.offline:
+            reqs = [dict(prompt_tokens=prompt, max_new_tokens=nn,
+                         temperature=args.temperature)
+                    for _, prompt, nn in trace]
+            eng.run_offline(reqs)
+            m = eng.metrics()
+        else:
+            m = serve_trace(eng, trace, temperature=args.temperature)
         path = "paged-kernel" if eng.paged_kernel else "gather"
+        mode = "offline" if args.offline else "online"
         print(f"[{name}] per-request TTFT (s):")
         for r in sorted(eng.finished, key=lambda r: r.req_id):
             print(f"  req {r.req_id:3d}: prompt={len(r.prompt):3d} "
                   f"new={len(r.out_tokens):3d} ttft={r.ttft:.3f}s"
                   + (f" (preempted x{r.preemptions})" if r.preemptions else ""))
-        print(f"[{name}] aggregate ({path}): {m['requests']} requests, "
+        print(f"[{name}] aggregate ({path}, {mode}): {m['requests']} requests, "
               f"{m['requests_per_sec']:.2f} req/s, "
               f"{m['tokens_per_sec']:.1f} new tok/s "
               f"({m['decode_tok_per_s']:.1f} decode tok/s steady-state), "
               f"mean TTFT {m['mean_ttft_s']:.3f}s, "
               f"{m['decode_compiles']} decode compiles over "
-              f"{m['decode_steps']} steps ({m['decode_shapes']} shape buckets)")
+              f"{m['decode_steps']} steps ({m['decode_shapes']} shape buckets)"
+              + (f"; {m['post_warmup_compiles']} post-warmup compiles"
+                 if args.warmup == "on" else ""))
         prefill_path = "chunked-kernel" if eng.prefill_kernel else "gather"
         print(f"[{name}] prefill ({prefill_path}): "
               f"{m['prefill_tok_per_s']:.1f} suffix tok/s steady-state, "
@@ -186,6 +205,19 @@ def main():
                     help="comma-separated prompt-suffix length buckets for "
                          "batched prefill, e.g. '8,16,32' (default: powers "
                          "of two, floor 8)")
+    ap.add_argument("--warmup", choices=("on", "off"), default="off",
+                    help="pre-compile every reachable decode/prefill jit "
+                         "signature against the trash page before serving, "
+                         "so the first request's TTFT equals steady state "
+                         "(bounded by the trace's worst-case cache need)")
+    ap.add_argument("--offline", action="store_true",
+                    help="serve the trace through the offline batch lane "
+                         "(run_offline: length-sorted admission, packed "
+                         "bucketed prefills) instead of staggered arrivals")
+    ap.add_argument("--detok-async", choices=("on", "off"), default="on",
+                    help="run detokenize + stream callbacks on the "
+                         "background worker thread (off: inline on the "
+                         "dispatch thread, the ordering oracle)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend a common prefix of this many tokens to "
                          "every trace prompt (prefix-cache-heavy traffic)")

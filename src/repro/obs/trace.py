@@ -101,6 +101,13 @@ class Tracer:
                     "pid": self._pid, "tid": threading.get_ident(),
                     **({"args": args} if args else {})})
 
+    def name_thread(self, name: str) -> None:
+        """Label the calling thread's lane in the trace viewer (``M``
+        metadata event) — background workers call this once at start so
+        their spans render on a named track."""
+        self._emit({"name": "thread_name", "ph": "M", "pid": self._pid,
+                    "tid": threading.get_ident(), "args": {"name": name}})
+
     # --------------------------------------------------------------- output
     def events(self) -> List[dict]:
         with self._lock:
@@ -160,6 +167,13 @@ def instant(name: str, **args) -> None:
     t = _TRACER
     if t is not None:
         t.instant(name, **args)
+
+
+def name_thread(name: str) -> None:
+    """Label the calling thread's trace lane; no-op when off."""
+    t = _TRACER
+    if t is not None:
+        t.name_thread(name)
 
 
 def save(path: str) -> int:

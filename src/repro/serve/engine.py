@@ -53,15 +53,39 @@ every time traffic shifts; ``metrics()["decode_compiles"]`` exposes the
 compile-cache counter that tests/test_serve_buckets.py guards. Padding rows
 read/write the pool's trash page and trash state slot.
 
+Warm start: because decode pads to shape buckets and prefill to
+(batch, length, blocks) buckets, the set of jit signatures any admissible
+trace can hit is *closed and enumerable* — ``warmup(max_len=...)``
+enumerates exactly that set (``warmup_signatures``) and executes every
+signature once against the pool's trash page before traffic arrives, so
+the first request's TTFT equals steady-state TTFT and
+``metrics()["post_warmup_compiles"]`` stays 0 under any traffic whose
+per-request cache need fits ``max_len`` (tests/test_warmup.py asserts
+``== 0``, not ``≤ buckets``). The pool pre-compiles its own maintenance
+jits (block zeroing, COW copy) in the same pass.
+
+Async host pipeline: per-token host work — detokenizing and the user's
+``stream_callback`` — runs on a background worker thread fed by a FIFO
+queue (``serve/detokenize.py``), so ``step()`` returns as soon as the next
+device step is dispatched. ``async_detok=False`` keeps the inline
+synchronous path as the ordering/parity oracle; ``run()`` flushes the
+worker before returning.
+
+Offline lane: ``run_offline(requests)`` is the MLPerf-style
+throughput-bound mode — sort by prompt length so same-bucket prompts are
+admitted together and pack into shared bucketed prefill calls, drive to
+drain, return results in input order.
+
 docs/serving.md documents the page/block/intern-chain/bucket vocabulary,
-the request data flow, and every CLI knob; docs/kernels.md documents the
-decode and chunked-prefill kernels this engine drives.
+the request data flow, the warmup lifecycle, and every CLI knob;
+docs/kernels.md documents the decode and chunked-prefill kernels this
+engine drives.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Iterator, List, Optional, Sequence
+from typing import Callable, Dict, Iterator, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +95,7 @@ from repro.models.common import CPU_CTX, ParallelCtx
 from repro.models.transformer import LM, period_specs
 from repro.obs import trace
 from repro.obs.metrics import LATENCY_BUCKETS, Registry
+from repro.serve.detokenize import DetokenizeWorker, deliver
 from repro.serve.paged_cache import BlockPool
 from repro.serve.scheduler import Request, Scheduler
 
@@ -165,7 +190,9 @@ class ContinuousEngine:
                  paged_attn_impl: Optional[str] = None,
                  bucket_sizes: Optional[Sequence[int]] = None,
                  prefix_cache: Optional[bool] = None,
-                 prefill_bucket_sizes: Optional[Sequence[int]] = None):
+                 prefill_bucket_sizes: Optional[Sequence[int]] = None,
+                 detokenizer: Optional[Callable[[int], str]] = None,
+                 async_detok: Optional[bool] = None):
         self.model = model
         self.params = params
         if paged_attn_impl is not None:
@@ -226,6 +253,19 @@ class ContinuousEngine:
         self._start_time: Optional[float] = None
         self._decode_shapes: set = set()
         self._prefill_shapes: set = set()
+        # async host pipeline: detokenize + stream callbacks run on the
+        # worker's thread (lazily started on first emission); off = inline
+        # synchronous delivery, the ordering/parity oracle
+        self.detokenizer = detokenizer
+        self.async_detok = True if async_detok is None else async_detok
+        self._detok = DetokenizeWorker(detokenizer) if self.async_detok \
+            else None
+        # warm-start bookkeeping: compile-cache sizes recorded when
+        # warmup() finishes, so post_warmup_compiles() counts only jit
+        # signatures traffic hit that warmup failed to cover
+        self._warmup_seconds = 0.0
+        self._warmed_decode = 0
+        self._warmed_prefill = 0
         # typed registry series replacing the former hand-rolled counter
         # attributes; the steady-state throughput pairs (tokens + seconds)
         # exclude steps that compiled a fresh jit signature
@@ -267,6 +307,11 @@ class ContinuousEngine:
                   fn=self.decode_compile_count)
         reg.gauge("serve_prefill_compiles", "prefill jit cache entries",
                   fn=self.prefill_compile_count)
+        reg.gauge("serve_warmup_seconds", "wall time spent in warmup()",
+                  fn=lambda: self._warmup_seconds)
+        reg.gauge("serve_post_warmup_compiles",
+                  "decode+prefill jit compiles not covered by warmup()",
+                  fn=self.post_warmup_compiles)
         m, cd = model, compute_dtype
         self._prefill = jax.jit(
             lambda p, tk, c, **kw: m.prefill(p, tk, c, ctx=ctx,
@@ -306,10 +351,13 @@ class ContinuousEngine:
     def submit(self, prompt_tokens, max_new_tokens: int, *,
                temperature: float = 0.0, seed: int = 0,
                eos_id: Optional[int] = None,
-               extras: Optional[Dict] = None) -> int:
+               extras: Optional[Dict] = None,
+               stream_callback: Optional[Callable] = None) -> int:
         """Enqueue one request; returns its id. ``prompt_tokens``: (T0,) ints;
         ``extras``: per-request model inputs shaped (1, ...) — whisper frames,
-        vlm vision_embeds."""
+        vlm vision_embeds. ``stream_callback`` receives a ``StreamEvent`` per
+        emitted token (on the detokenize worker thread unless
+        ``async_detok=False``)."""
         prompt = np.asarray(prompt_tokens, np.int32).reshape(-1)
         vis = 0
         cfg = getattr(self.model, "cfg", None)
@@ -319,7 +367,8 @@ class ContinuousEngine:
         req = Request(req_id=self._next_id, prompt=prompt,
                       max_new_tokens=max_new_tokens, temperature=temperature,
                       seed=seed, eos_id=eos_id, extras=extras, vis_offset=vis,
-                      cacheable=self._chunk_ok and not extras and vis == 0)
+                      cacheable=self._chunk_ok and not extras and vis == 0,
+                      stream_callback=stream_callback)
         need = self.pool.blocks_for(req.cache_budget())
         if need > self.pool.usable_blocks:
             raise ValueError(
@@ -400,12 +449,191 @@ class ContinuousEngine:
         return child.req_id
 
     def stream(self) -> Iterator[Request]:
-        """Drive steps until the queue drains, yielding finished requests."""
+        """Drive steps until the queue drains, yielding finished requests.
+        With the async pipeline on, a yielded request's detokenized ``text``
+        and callbacks may still be in flight — ``flush_stream()`` (which
+        ``run()`` calls) waits for them."""
         while self.has_work():
             yield from self.step()
 
+    def flush_stream(self) -> None:
+        """Block until every emitted token's detokenize/callback work has
+        been delivered by the background worker (no-op when synchronous)."""
+        if self._detok is not None:
+            self._detok.flush()
+
     def run(self) -> List[Request]:
-        return list(self.stream())
+        out = list(self.stream())
+        self.flush_stream()
+        return out
+
+    def run_offline(self, requests, *, sort_by_length: bool = True
+                    ) -> List[Request]:
+        """MLPerf-style offline batch-inference lane for throughput-bound
+        workloads (latency does not matter, tok/s/$ does).
+
+        ``requests``: a sequence of ``(prompt_tokens, max_new_tokens)``
+        pairs or dicts of ``submit()`` kwargs. Everything is enqueued up
+        front, sorted by prompt length (longest first) so prompts landing
+        in the same suffix-length bucket are admitted together and pack
+        into shared batched prefill calls; the engine then drives itself to
+        drain and flushes the stream pipeline. Returns the finished
+        ``Request`` objects in *input* order."""
+        norm = []
+        for r in requests:
+            if isinstance(r, dict):
+                norm.append(dict(r))
+            else:
+                prompt, n = r
+                norm.append({"prompt_tokens": prompt, "max_new_tokens": n})
+        order = list(range(len(norm)))
+        if sort_by_length:
+            order.sort(key=lambda i: -len(
+                np.asarray(norm[i]["prompt_tokens"]).reshape(-1)))
+        with trace.span("serve.run_offline", requests=len(norm)):
+            ids = {i: self.submit(**norm[i]) for i in order}
+            while self.has_work():
+                self.step()
+            self.flush_stream()
+        by_id = {r.req_id: r for r in self.finished}
+        return [by_id[ids[i]] for i in range(len(norm))]
+
+    # -------------------------------------------------------------- warm start
+    def warmup_signatures(self, max_len: int):
+        """Enumerate every jit signature a trace whose per-request cache
+        need stays within ``max_len`` positions can hit.
+
+        Decode: sig ``(b_pad, nb_pad, paged_kernel)`` — every batch bucket
+        crossed with every power-of-two block envelope up to the largest a
+        ``max_len``-position table can produce (capped by the pool, which a
+        real table can never exceed). Chunked prefill: sig ``(b_pad, l_pad,
+        nb_pad)`` — for each suffix-length bucket, the shortest suffix that
+        maps to it bounds how high a block-aligned cached-prefix offset can
+        sit underneath it (``start + suffix <= max_len``), and each
+        reachable offset yields one block envelope; without the prefix
+        cache the offset is always 0. Returns ``(decode_sigs,
+        prefill_sigs)`` as lists of those tuples."""
+        nb_cap = _pow2_at_least(min(self.pool.blocks_for(max_len),
+                                    self.pool.usable_blocks))
+        decode = []
+        for b in self.bucket_sizes:
+            nb = 1
+            while nb <= nb_cap:
+                decode.append((b, nb, self.paged_kernel))
+                nb *= 2
+        prefill = []
+        if self._chunk_ok:
+            l_buckets = sorted({self._bucket_prefill(l)
+                                for l in range(1, max_len + 1)})
+            prev = 0
+            for l_pad in l_buckets:
+                len_min = prev + 1          # shortest suffix in this bucket
+                prev = l_pad
+                if self.prefix_cache:
+                    start_max = ((max_len - len_min) // self.block_size
+                                 ) * self.block_size
+                    starts = range(0, start_max + 1, self.block_size)
+                else:
+                    starts = (0,)
+                nbs = sorted({_pow2_at_least(self.pool.blocks_for(s + l_pad))
+                              for s in starts})
+                for b in self.bucket_sizes:
+                    for nb in nbs:
+                        prefill.append((b, l_pad, nb))
+        return decode, prefill
+
+    def warmup(self, *, max_len: Optional[int] = None) -> Dict[str, float]:
+        """Pre-compile every reachable jit signature against the trash page
+        so no admissible request ever waits on XLA: executes (not just
+        AOT-lowers — execution is what populates the jit dispatch cache)
+        one all-padding call per decode/prefill signature from
+        ``warmup_signatures(max_len)``, warms the row sampler at each batch
+        bucket and the pool's maintenance jits, and seeds the signature
+        sets so the first real step is steady-state for the throughput
+        timers. ``max_len`` bounds the worst-case per-request cache
+        positions (prompt + generated + vision prefix) to warm for;
+        defaults to — and is capped at — pool capacity. Re-running after
+        traffic (or with a larger ``max_len``) only compiles what is
+        missing. Returns a summary dict; wall time accumulates into
+        ``metrics()["warmup_seconds"]``."""
+        cap = self.pool.usable_blocks * self.block_size
+        max_len = cap if max_len is None else min(max_len, cap)
+        t0 = time.perf_counter()
+        decode_sigs, prefill_sigs = self.warmup_signatures(max_len)
+        with trace.span("serve.warmup", max_len=max_len,
+                        decode_sigs=len(decode_sigs),
+                        prefill_sigs=len(prefill_sigs)):
+            self.pool.warm(self.pool.blocks_for(max_len))
+            for b, nb, _ in decode_sigs:
+                self._warm_decode(b, nb)
+            for b, l, nb in prefill_sigs:
+                self._warm_prefill(b, l, nb)
+        self._warmed_decode = self.decode_compile_count()
+        self._warmed_prefill = self.prefill_compile_count()
+        dt = time.perf_counter() - t0
+        self._warmup_seconds += dt
+        return {"warmup_seconds": dt, "max_len": float(max_len),
+                "decode_signatures": float(len(decode_sigs)),
+                "prefill_signatures": float(len(prefill_sigs))}
+
+    def post_warmup_compiles(self) -> int:
+        """Decode+prefill jit compiles beyond what ``warmup()`` covered —
+        the zero-stall invariant: 0 after warmup under admissible traffic
+        (before any warmup it simply counts all compiles)."""
+        return ((self.decode_compile_count() - self._warmed_decode)
+                + (self.prefill_compile_count() - self._warmed_prefill))
+
+    def _warm_decode(self, b: int, nb: int) -> None:
+        """Execute one decode step at signature ``(b, nb)`` with zero rows:
+        all-trash tables/slots, so the in-place page writes land in the
+        trash page and no real state is touched."""
+        sig = (b, nb, self.paged_kernel)
+        if sig in self._decode_shapes:
+            return
+        self._decode_shapes.add(sig)
+        tok = jnp.zeros((b, 1), jnp.int32)
+        pos = jnp.zeros((b,), jnp.int32)
+        if self.paged_kernel:
+            tables = self.pool.padded_tables([], rows=b, blocks=nb)
+            cache = self.pool.paged_cache([], rows=b)
+            logits, cache = self._decode_paged(self.params, tok, cache, pos,
+                                               tables)
+            self.pool.absorb_paged([], cache, rows=b)
+        else:
+            cache = self.pool.gather_batch([], rows=b, blocks=nb)
+            logits, cache = self._decode(self.params, tok, cache, pos)
+            self.pool.scatter_token([], cache, pos, rows=b, blocks=nb)
+        self._warm_sample(jax.block_until_ready(logits), b)
+
+    def _warm_prefill(self, b: int, l: int, nb: int) -> None:
+        """Execute one batched suffix prefill at signature ``(b, l, nb)``
+        with zero rows (per-row lengths 1, offsets 0, all-trash tables)."""
+        sig = (b, l, nb)
+        if sig in self._prefill_shapes:
+            return
+        self._prefill_shapes.add(sig)
+        tok = jnp.zeros((b, l), jnp.int32)
+        pos = jnp.zeros((b,), jnp.int32)
+        ln = jnp.ones((b,), jnp.int32)
+        if self.prefill_kernel:
+            tables = self.pool.padded_tables([], rows=b, blocks=nb)
+            cache = self.pool.paged_cache([], rows=b)
+            logits, cache = self._prefill_chunk_paged(self.params, tok, cache,
+                                                      pos, ln, tables)
+            self.pool.absorb_paged([], cache, rows=b)
+        else:
+            cache = self.pool.gather_batch([], rows=b, blocks=nb)
+            logits, cache = self._prefill_chunk(self.params, tok, cache,
+                                                pos, ln)
+            self.pool.scatter_suffix([], cache, [], [], rows=b, blocks=nb)
+        self._warm_sample(jax.block_until_ready(logits), b)
+
+    def _warm_sample(self, logits, b: int) -> None:
+        """Warm the row sampler at batch bucket ``b`` (its jit signature
+        depends only on the batch, which the warm call's real logits carry)."""
+        temps = jnp.zeros((b,), jnp.float32)
+        keys = jnp.stack([jax.random.PRNGKey(0)] * b)
+        jax.block_until_ready(self._sample(logits, temps, keys))
 
     def generate(self, prompt_tokens, max_new_tokens: int, *,
                  extras: Optional[Dict] = None, temperature: float = 0.0,
@@ -505,6 +733,8 @@ class ContinuousEngine:
             "queue_depth": len(self.scheduler.waiting),
             "preemptions": int(self.registry.get(
                 "serve_preemptions_total").value),
+            "warmup_seconds": self._warmup_seconds,
+            "post_warmup_compiles": self.post_warmup_compiles(),
         }
         if not fin:
             return {"requests": 0, "requests_per_sec": 0.0, "new_tokens": 0,
@@ -525,6 +755,19 @@ class ContinuousEngine:
         }
 
     # ------------------------------------------------------------ internals
+    def _emit_stream(self, req: Request, token: int, done: bool) -> None:
+        """Hand one emitted token to the host pipeline: enqueued to the
+        background worker (O(1) on the dispatch thread) or delivered inline
+        when ``async_detok=False``. Skipped when there is nothing to do —
+        no detokenizer and no callback on the request."""
+        if self.detokenizer is None and req.stream_callback is None:
+            return
+        index = len(req.out_tokens) - 1
+        if self._detok is not None:
+            self._detok.submit(req, token, index, done)
+        else:
+            deliver(req, token, index, done, self.detokenizer)
+
     def _finish(self, req: Request) -> None:
         self.scheduler.evict(req)
         self.finished.append(req)
@@ -575,6 +818,7 @@ class ContinuousEngine:
             req.cache_len = l0
             tok = int(self._sample_tokens(logits, [req])[0])
             req.out_tokens.append(tok)
+            self._emit_stream(req, tok, req.done)
             if req.first_token_time is None:
                 req.first_token_time = time.perf_counter()
                 self._h_ttft.observe(req.ttft)
@@ -640,6 +884,7 @@ class ContinuousEngine:
         for r, start, ln_i, t in zip(reqs, starts, lens, nxt):
             r.cache_len = start + ln_i
             r.out_tokens.append(int(t))
+            self._emit_stream(r, int(t), r.done)
             if r.first_token_time is None:
                 r.first_token_time = now
                 self._h_ttft.observe(r.ttft)
@@ -700,6 +945,7 @@ class ContinuousEngine:
         done = []
         for r, t in zip(running, nxt):
             r.out_tokens.append(int(t))
+            self._emit_stream(r, int(t), r.done)
             if (self.prefix_cache and r.cacheable
                     and r.cache_len % self.block_size == 0):
                 # a generated block just filled: register it so identical

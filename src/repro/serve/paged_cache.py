@@ -434,11 +434,37 @@ class BlockPool:
                 jnp.int32(self._slots[child_id]))
 
     def _zero(self, blks: List[int]) -> None:
-        # reused blocks must read as zeros, not stale KV from a freed request
+        # reused blocks must read as zeros, not stale KV from a freed request.
+        # The id count pads to a power of two (trash page absorbs the extra
+        # writes) so the zeroing jit keeps a closed signature set that
+        # ``warm()`` can pre-compile instead of recompiling per alloc size.
         if blks and self.token_store:
+            n = 1 << max(len(blks) - 1, 0).bit_length()
+            ids = list(blks) + [0] * (n - len(blks))
             self.token_store = _zero_blocks(tuple(self.layout.specs),
                                             self.token_store,
-                                            jnp.asarray(blks, jnp.int32))
+                                            jnp.asarray(ids, jnp.int32))
+
+    def warm(self, max_blocks: int) -> None:
+        """Pre-compile the pool's own jitted maintenance ops — block zeroing
+        at every padded id-count signature up to ``max_blocks`` and the
+        copy-on-write block copy — against the trash page, so none of them
+        compiles on a request's critical path after ``ContinuousEngine.
+        warmup()``."""
+        if not self.token_store:
+            return
+        n = 1
+        while True:
+            self.token_store = _zero_blocks(tuple(self.layout.specs),
+                                            self.token_store,
+                                            jnp.zeros((n,), jnp.int32))
+            if n >= max(max_blocks, 1):
+                break
+            n *= 2
+        # trash copied onto itself: same signature as a real COW copy
+        self.token_store = _copy_block(tuple(self.layout.specs),
+                                       self.token_store,
+                                       jnp.int32(0), jnp.int32(0))
 
     def free(self, req_id: int) -> None:
         for b in self._tables.pop(req_id):
@@ -453,7 +479,7 @@ class BlockPool:
         return self._slots[req_id]
 
     def max_table_blocks(self, req_ids) -> int:
-        return max(len(self._tables[r]) for r in req_ids)
+        return max((len(self._tables[r]) for r in req_ids), default=0)
 
     def padded_tables(self, req_ids, *, rows: Optional[int] = None,
                       blocks: Optional[int] = None) -> jnp.ndarray:

@@ -17,7 +17,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Deque, List, Optional
+from typing import Callable, Deque, List, Optional
 
 import numpy as np
 
@@ -44,6 +44,11 @@ class Request:
     #                                          batched suffix prefill (set by
     #                                          the engine: no extras, text-only
     #                                          cache positions)
+    stream_callback: Optional[Callable] = None  # per-token StreamEvent sink,
+    #                                          run on the detokenize worker
+    #                                          (or inline with async_detok off)
+    text: str = ""                           # detokenized output accumulated
+    #                                          by the detokenize pipeline
     state: str = WAITING
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     cache_len: int = 0                       # logical positions written to cache

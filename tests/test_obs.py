@@ -238,6 +238,7 @@ METRICS_KEYS = {
     "prefill_tok_per_s", "prefill_kernel",
     "prefix_hit_rate", "prefix_hit_tokens", "cached_blocks",
     "cow_copies", "prefix_evictions", "queue_depth",
+    "warmup_seconds", "post_warmup_compiles",
 }
 
 # frozen registry series names (snapshot() expands histograms with these
@@ -251,6 +252,7 @@ REGISTRY_NAMES = {
     "serve_ttft_seconds", "serve_decode_step_seconds",
     "serve_running_requests", "serve_decode_compiles",
     "serve_prefill_compiles",
+    "serve_warmup_seconds", "serve_post_warmup_compiles",
     "serve_queue_depth", "serve_queue_wait_seconds",
     "serve_requests_admitted_total", "serve_preemptions_total",
     "pool_cow_copies_total", "pool_prefix_evictions_total",

@@ -1,0 +1,158 @@
+"""AOT warmup, async detokenize pipeline, offline lane.
+
+The zero-stall contract: ``warmup(max_len)`` enumerates the *complete*
+closed set of jit signatures admissible traffic can hit and executes each
+once against the trash page — so after warmup the compile counters must
+stay exactly frozen (``== 0`` new compiles, not ``<= bucket count``) under
+staggered mixed-length traffic including prefix-cache hits at nonzero
+offsets, and the first request's TTFT is steady-state (orders of magnitude
+under a cold engine's compile-dominated first TTFT). The async host
+pipeline must be invisible to results: token-exact greedy parity with the
+inline synchronous oracle, identical detokenized text, and per-request
+callback events in exact emission order. The offline lane reorders
+admission (length-sorted packing) but per-request greedy trajectories are
+deterministic, so tokens must match the online engine request-for-request.
+
+Configs are tiny (block 4, pool 24, 2 running slots, one explicit prefill
+bucket) so each warmup compiles ~16 signatures, not a production grid.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serve import ContinuousEngine
+
+MAX_LEN = 16    # worst-case per-request cache positions in every trace here
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = get_smoke_config("smollm_135m")
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("block_size", 4)
+    kw.setdefault("num_blocks", 24)
+    kw.setdefault("max_running", 2)
+    kw.setdefault("prefill_bucket_sizes", (8,))
+    return ContinuousEngine(model, params, compute_dtype=jnp.float32,
+                            cache_dtype=jnp.float32, **kw)
+
+
+def _trace(cfg, seed=0):
+    """Mixed-length requests, two sharing a block-aligned 4-token prefix so
+    the steady stream includes a prefix-cache hit (prefill at offset > 0).
+    Every (prompt + new) stays within MAX_LEN."""
+    rng = np.random.RandomState(seed)
+    common = rng.randint(1, cfg.vocab_size, (4,)).astype(np.int32)
+    mk = lambda n: rng.randint(1, cfg.vocab_size, (n,)).astype(np.int32)
+    return [
+        (np.concatenate([common, mk(4)]), 6),
+        (mk(3), 5),
+        (mk(10), 4),
+        (np.concatenate([common, mk(7)]), 5),
+        (mk(2), 6),
+    ]
+
+
+def _serve_staggered(eng, reqs, **submit_kw):
+    """Submit one request per engine step so joiners land mid-decode."""
+    ids = []
+    for prompt, nn in reqs:
+        ids.append(eng.submit(prompt, nn, **submit_kw))
+        eng.step()
+    eng.run()
+    fin = {r.req_id: r for r in eng.finished}
+    return [fin[i] for i in ids]
+
+
+def test_zero_compiles_after_warmup(smollm):
+    cfg, model, params = smollm
+    eng = _engine(model, params)
+    eng.warmup(max_len=MAX_LEN)
+    base_decode = eng.decode_compile_count()
+    base_prefill = eng.prefill_compile_count()
+    _serve_staggered(eng, _trace(cfg))
+    # the invariant: exactly zero — not "at most the bucket count"
+    assert eng.post_warmup_compiles() == 0
+    assert eng.decode_compile_count() == base_decode
+    assert eng.prefill_compile_count() == base_prefill
+    assert eng.metrics()["post_warmup_compiles"] == 0
+    assert eng.metrics()["warmup_seconds"] > 0.0
+    # the prefix-hit path (offset > 0 prefill signatures) actually ran
+    assert eng.metrics()["prefix_hit_tokens"] > 0
+    # warming again is a no-op: every signature is already cached
+    again = eng.warmup(max_len=MAX_LEN)
+    assert eng.decode_compile_count() == base_decode
+    assert eng.prefill_compile_count() == base_prefill
+    assert again["warmup_seconds"] < 1.0
+
+
+def test_warm_first_ttft_is_steady_state(smollm):
+    cfg, model, params = smollm
+    reqs = _trace(cfg, seed=3)
+    cold = _engine(model, params)
+    cold_first = _serve_staggered(cold, reqs)[0].ttft
+    warm = _engine(model, params)
+    warm.warmup(max_len=MAX_LEN)
+    warm_first = _serve_staggered(warm, reqs)[0].ttft
+    # a cold first request pays >= 1 XLA compile (seconds on this CPU); a
+    # warmed one pays only the steady-state prefill+decode, so even a very
+    # generous bound separates them without wall-clock flakiness
+    assert warm_first < cold_first / 2
+    assert warm.metrics()["post_warmup_compiles"] == 0
+
+
+def test_async_detok_parity_and_callback_order(smollm):
+    cfg, model, params = smollm
+    reqs = _trace(cfg, seed=5)
+    detok = lambda t: f"<{t}>"          # noqa: E731
+
+    def serve(async_on):
+        events = []
+        eng = _engine(model, params, detokenizer=detok, async_detok=async_on)
+        fins = _serve_staggered(eng, reqs, stream_callback=events.append)
+        eng.flush_stream()
+        return fins, events
+
+    sync_fins, sync_events = serve(False)
+    async_fins, async_events = serve(True)
+    for s, a in zip(sync_fins, async_fins):
+        assert s.out_tokens == a.out_tokens          # token-exact greedy
+        assert s.text == a.text == "".join(f"<{t}>" for t in s.out_tokens)
+    # per-request event streams are identical and in emission order
+    for fins, events in ((sync_fins, sync_events), (async_fins, async_events)):
+        for r in fins:
+            evs = [e for e in events if e.req_id == r.req_id]
+            assert [e.token for e in evs] == r.out_tokens
+            assert [e.index for e in evs] == list(range(len(evs)))
+            assert [e.done for e in evs] == \
+                [False] * (len(evs) - 1) + [True]
+            assert [e.text for e in evs] == \
+                [f"<{t}>" for t in r.out_tokens]
+    key = lambda e: (e.req_id, e.index, e.token, e.text, e.done)  # noqa: E731
+    assert sorted(map(key, sync_events)) == sorted(map(key, async_events))
+
+
+def test_offline_lane_parity(smollm):
+    cfg, model, params = smollm
+    reqs = _trace(cfg, seed=7)
+    online = _engine(model, params)
+    ids = [online.submit(p, n) for p, n in reqs]
+    fin = {r.req_id: r for r in online.run()}
+    offline = _engine(model, params)
+    results = offline.run_offline(reqs)
+    assert len(results) == len(reqs)
+    for (prompt, _), rid, res in zip(reqs, ids, results):
+        np.testing.assert_array_equal(res.prompt, prompt)  # input order kept
+        assert res.out_tokens == fin[rid].out_tokens       # token parity
+    # length-sorted packing really batched prefills: fewer batched calls
+    # than requests (same-bucket prompts admitted together)
+    m = offline.metrics()
+    assert m["requests"] == len(reqs)
+    assert m["prefill_batches"] < len(reqs)

@@ -1,0 +1,99 @@
+"""Render pytest junit XML into a GitHub Actions step summary.
+
+CI runs this ``if: always()`` right after each pytest step, so a red run
+shows its failures (with messages) and its slowest tests on the run's
+summary page instead of burying them in a 10k-line log::
+
+    python tools/junit_summary.py pytest-junit*.xml
+
+Writes GitHub-flavored markdown to ``$GITHUB_STEP_SUMMARY`` when set (the
+Actions contract: appending to that file renders on the run page) and
+always mirrors it to stdout, so the tool is greppable locally too. Per
+junit file: the pass/fail/error/skip tally and total wall time, every
+failure or error with its condensed message, and the top-10 slowest tests.
+Missing artifacts are reported but do not fail the tool — it must never
+mask the pytest step's own exit code (the summary of a crashed run is
+"file missing", not a second failure). Pure stdlib.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+import xml.etree.ElementTree as ET
+
+SLOWEST = 10
+
+
+def _case_id(case: ET.Element) -> str:
+    cls = case.get("classname") or ""
+    name = case.get("name") or "?"
+    return f"{cls}::{name}" if cls else name
+
+
+def _message(node: ET.Element) -> str:
+    msg = (node.get("message") or (node.text or "").strip()
+           or node.tag).splitlines()
+    first = next((ln.strip() for ln in msg if ln.strip()), node.tag)
+    return first[:300]
+
+
+def summarize(path: pathlib.Path) -> str:
+    try:
+        root = ET.parse(path).getroot()
+    except (OSError, ET.ParseError) as e:
+        return f"### `{path.name}`\n\n_unreadable junit file: {e}_\n"
+    suites = root.iter("testsuite") if root.tag == "testsuites" else [root]
+    cases, tally = [], {"tests": 0, "failures": 0, "errors": 0, "skipped": 0}
+    wall = 0.0
+    for suite in suites:
+        for k in tally:
+            tally[k] += int(suite.get(k) or 0)
+        wall += float(suite.get("time") or 0.0)
+        cases.extend(suite.iter("testcase"))
+    passed = (tally["tests"] - tally["failures"] - tally["errors"]
+              - tally["skipped"])
+    status = "✅" if tally["failures"] + tally["errors"] == 0 else "❌"
+    lines = [f"### {status} `{path.name}` — {passed} passed, "
+             f"{tally['failures']} failed, {tally['errors']} errors, "
+             f"{tally['skipped']} skipped in {wall:.1f}s", ""]
+    bad = [(c, n) for c in cases
+           for n in c if n.tag in ("failure", "error")]
+    if bad:
+        lines += ["| failed test | message |", "|---|---|"]
+        lines += [f"| `{_case_id(c)}` | {_message(n)} |" for c, n in bad]
+        lines.append("")
+    timed = sorted(cases, key=lambda c: float(c.get("time") or 0.0),
+                   reverse=True)[:SLOWEST]
+    if timed:
+        lines += [f"<details><summary>top {len(timed)} slowest</summary>", "",
+                  "| test | seconds |", "|---|---|"]
+        lines += [f"| `{_case_id(c)}` | {float(c.get('time') or 0.0):.2f} |"
+                  for c in timed]
+        lines += ["", "</details>", ""]
+    return "\n".join(lines)
+
+
+def main(argv) -> int:
+    if not argv:
+        print("usage: junit_summary.py JUNIT_XML [...]", file=sys.stderr)
+        return 2
+    chunks = []
+    for a in argv:
+        path = pathlib.Path(a)
+        if not path.exists():
+            chunks.append(f"### `{path.name}`\n\n_file missing (step "
+                          "crashed before writing junit output?)_\n")
+        else:
+            chunks.append(summarize(path))
+    doc = "\n".join(chunks)
+    print(doc)
+    out = os.environ.get("GITHUB_STEP_SUMMARY")
+    if out:
+        with open(out, "a") as f:
+            f.write(doc + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
