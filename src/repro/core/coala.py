@@ -189,8 +189,10 @@ def coala_alpha_factors(w: jax.Array, x: Optional[jax.Array] = None, *,
     """
     if (x is None) == (r_factor is None):
         raise ValueError("pass exactly one of x / r_factor")
-    if alpha == 1.0 and mu >= 0.0:
-        res = coala_factors(w, x, r_factor=r_factor, rank=rank, mu=max(mu, 0.0))
+    if mu < 0.0:
+        raise ValueError(f"mu must be non-negative, got {mu}")
+    if alpha == 1.0 and mu == 0.0:
+        res = coala_factors(w, x, r_factor=r_factor, rank=rank)
         return res.a, res.b
     src = r_factor if r_factor is not None else x
     s_alpha = alpha_weight_factor(src, alpha, is_r=r_factor is not None)
@@ -203,9 +205,16 @@ def coala_alpha_factors(w: jax.Array, x: Optional[jax.Array] = None, *,
 
 def balanced_split(a: jax.Array, b: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Rebalance (A, B) so both factors have comparable scale (adapter init:
-    gradients are better conditioned when ||A col_i|| ≈ ||B row_i||)."""
-    rn = jnp.sqrt(jnp.linalg.norm(b, axis=1))            # (r,)
-    rn = jnp.maximum(rn, jnp.finfo(b.dtype).eps)
+    gradients are better conditioned when ||A col_i|| ≈ ||B row_i||).
+
+    Per index i the scale ``sqrt(||B row_i|| / ||A col_i||)`` moves both
+    norms to the geometric mean ``sqrt(||A col_i|| · ||B row_i||)`` for
+    arbitrary (A, B) — e.g. baselines-produced or merged factors; when A's
+    columns are orthonormal it reduces to the ``sqrt(||B row_i||)`` scale."""
+    eps = jnp.finfo(b.dtype).eps
+    bn = jnp.maximum(jnp.linalg.norm(b, axis=1), eps)    # (r,)
+    an = jnp.maximum(jnp.linalg.norm(a, axis=0), eps)    # (r,)
+    rn = jnp.sqrt(bn / an)
     return a * rn[None, :], b / rn[:, None]
 
 

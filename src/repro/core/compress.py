@@ -272,6 +272,23 @@ def compress_model(model, params, calibrator, ccfg: CompressConfig):
     return new_params, reports
 
 
+def compress_model_pair(model, params, calibrator, ccfg: CompressConfig, *,
+                        draft_ratio: float):
+    """Target + draft compression from ONE calibration pass.
+
+    Self-speculative serving compresses the same model twice — the serving
+    target at ``ccfg.ratio`` and a harder-compressed draft at ``draft_ratio``
+    — and both solves reuse the calibrator's R factors, so the activation
+    pass over the calibration data is paid once. Returns
+    ``(target_params, draft_params, target_reports, draft_reports)``."""
+    if not 0.0 < draft_ratio < 1.0:
+        raise ValueError(f"draft_ratio must be in (0, 1), got {draft_ratio}")
+    tparams, treports = compress_model(model, params, calibrator, ccfg)
+    dcfg = dataclasses.replace(ccfg, ratio=draft_ratio, rank=0)
+    dparams, dreports = compress_model(model, params, calibrator, dcfg)
+    return tparams, dparams, treports, dreports
+
+
 def compression_summary(reports) -> dict:
     before = sum(r.params_before for r in reports)
     after = sum(r.params_after for r in reports)

@@ -22,7 +22,8 @@ import numpy as np
 from repro.config import CompressConfig
 from repro.configs import get_config, get_smoke_config
 from repro.core.calibrate import calibrate_model
-from repro.core.compress import compress_model, compression_summary
+from repro.core.compress import (compress_model, compress_model_pair,
+                                 compression_summary)
 from repro.data import DataConfig, TokenPipeline
 from repro.models import build_model
 from repro.obs import trace as obs_trace
@@ -65,13 +66,21 @@ def serve_trace(engine: ContinuousEngine, trace, *, temperature: float = 0.0):
     return engine.metrics()
 
 
-def _compressed_params(cfg, model, params, pipe, ratio: float):
+def _compressed_params(cfg, model, params, pipe, ratio: float,
+                       draft_ratio: float = 0.0):
+    """COALA-compress at ``ratio``; with ``draft_ratio`` also build the
+    harder-compressed speculative draft from the same calibration pass."""
     cal = calibrate_model(model, params, [pipe.get_batch(i) for i in range(2)])
-    cparams, reports = compress_model(
-        model, params, cal,
-        CompressConfig(method="coala", ratio=ratio, lam=4.0, mu=-1.0))
+    ccfg = CompressConfig(method="coala", ratio=ratio, lam=4.0, mu=-1.0)
+    if draft_ratio > 0:
+        cparams, dparams, reports, dreports = compress_model_pair(
+            model, params, cal, ccfg, draft_ratio=draft_ratio)
+        print("compression:", compression_summary(reports))
+        print("draft compression:", compression_summary(dreports))
+        return cparams, dparams
+    cparams, reports = compress_model(model, params, cal, ccfg)
     print("compression:", compression_summary(reports))
-    return cparams
+    return cparams, None
 
 
 def _parse_buckets(spec: str):
@@ -84,7 +93,8 @@ def run_continuous(args, cfg, model, params, pipe):
         print("no requests to serve")
         return None
     ratio = args.compress_ratio if args.compress_ratio > 0 else 0.6
-    cparams = _compressed_params(cfg, model, params, pipe, ratio)
+    cparams, dparams = _compressed_params(cfg, model, params, pipe, ratio,
+                                          draft_ratio=args.draft_ratio)
     trace = synthetic_trace(args.requests, cfg.vocab_size, seed=args.seed,
                             max_new=args.new_tokens,
                             shared_prefix=args.shared_prefix)
@@ -107,7 +117,8 @@ def run_continuous(args, cfg, model, params, pipe):
                                prefix_cache=prefix,
                                prefill_bucket_sizes=_parse_buckets(
                                    args.prefill_bucket_sizes),
-                               async_detok=args.detok_async == "on")
+                               async_detok=args.detok_async == "on",
+                               draft_params=dparams, spec_k=args.spec_k)
         if args.warmup == "on":
             w = eng.warmup(max_len=warm_len)
             print(f"[{name}] warmup: {w['warmup_seconds']:.2f}s for "
@@ -138,6 +149,12 @@ def run_continuous(args, cfg, model, params, pipe):
               f"{m['decode_steps']} steps ({m['decode_shapes']} shape buckets)"
               + (f"; {m['post_warmup_compiles']} post-warmup compiles"
                  if args.warmup == "on" else ""))
+        if "spec_accept_rate" in m:
+            print(f"[{name}] speculative (draft ratio {args.draft_ratio}, "
+                  f"k={int(m['spec_k'])}): {int(m['spec_rounds'])} rounds, "
+                  f"accept rate {m['spec_accept_rate']:.2f} "
+                  f"({int(m['spec_accepted_tokens'])}/"
+                  f"{int(m['spec_proposed_tokens'])} draft tokens)")
         prefill_path = "chunked-kernel" if eng.prefill_kernel else "gather"
         print(f"[{name}] prefill ({prefill_path}): "
               f"{m['prefill_tok_per_s']:.1f} suffix tok/s steady-state, "
@@ -155,8 +172,8 @@ def run_continuous(args, cfg, model, params, pipe):
 
 def run_fixed(args, cfg, model, params, pipe):
     if args.compress_ratio > 0:
-        params = _compressed_params(cfg, model, params, pipe,
-                                    args.compress_ratio)
+        params, _ = _compressed_params(cfg, model, params, pipe,
+                                       args.compress_ratio)
     eng = ServeEngine(model, params, compute_dtype=jnp.float32,
                       cache_dtype=jnp.float32)
     batch = pipe.get_batch(0)
@@ -174,6 +191,15 @@ def main():
     ap.add_argument("--continuous", action="store_true",
                     help="continuous batching over the paged KV cache")
     ap.add_argument("--compress-ratio", type=float, default=0.0)
+    ap.add_argument("--draft-ratio", type=float, default=0.0,
+                    help="self-speculative decoding: also build a harder-"
+                         "compressed COALA draft at this kept-parameter "
+                         "ratio from the same calibration pass, and serve "
+                         "with draft-proposed tokens verified by the target "
+                         "(continuous engine only; 0 = off)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per speculative round "
+                         "(used with --draft-ratio)")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)

@@ -445,6 +445,29 @@ class LM:
             h, idx[:, None, None].astype(jnp.int32), axis=1)
         return self._logits(params, h_last)[:, 0], cache
 
+    def verify_chunk(self, params, tokens, cache, pos, lens, *,
+                     ctx: ParallelCtx = CPU_CTX, compute_dtype=jnp.bfloat16,
+                     block_tables=None):
+        """Speculative-decoding verifier: ``prefill_chunk`` returning the
+        logits at *every* position, (B, L, vocab), not just the last valid
+        one.
+
+        tokens: (B, L) int32 — row i is ``[last_committed, d_1..d_{L-1}]``,
+        the request's last emitted token followed by its draft proposals;
+        pos: (B,) start offsets (the request's ``cache_len``); lens: (B,)
+        valid counts. Rides the identical row-offset attention path as
+        ``prefill_chunk`` (the PR-4 L-token paged write path), so one call
+        scores all L positions against the cache: ``logits[:, i]`` is the
+        target's next-token distribution after consuming position
+        ``pos + i``, which accept/reject compares with proposal ``d_{i+1}``.
+        K/V for rejected tail tokens lands past the accepted length and is
+        overwritten by the next round before any causal mask can expose it.
+        """
+        x = self._embed(params, tokens).astype(compute_dtype)
+        h, _, cache = self._backbone(params, x, ctx=ctx, cache=cache, pos=pos,
+                                     paged_tables=block_tables, lens=lens)
+        return self._logits(params, h), cache
+
     def decode_step(self, params, tokens, cache, pos, *,
                     ctx: ParallelCtx = CPU_CTX, compute_dtype=jnp.bfloat16,
                     block_tables=None):

@@ -76,6 +76,21 @@ throughput-bound mode — sort by prompt length so same-bucket prompts are
 admitted together and pack into shared bucketed prefill calls, drive to
 drain, return results in input order.
 
+Speculative decoding (``draft_params=...``): the engine serves the target
+model and a COALA-compressed draft of it side by side, each against its
+own paged pool (identical geometry — compression only changes weights).
+Every decode round, one jitted ``lax.scan`` over ``spec_k + 1`` draft
+steps proposes ``spec_k`` tokens per request (sampling in-scan, so the
+whole proposal costs a single dispatch), then the target scores all
+``spec_k + 1`` positions in one ``verify_chunk`` call riding the PR-4
+L-token paged write path. Greedy rows accept the longest prefix of
+proposals matching the target argmax (token-exact vs the non-speculative
+engine by induction); temperature rows run standard rejection sampling
+(accept ``d_i`` w.p. ``min(1, p/q)``, residual draw from
+``norm(max(p-q, 0))``, bonus draw after a full accept). Rejected tail
+pages are rolled back via ``BlockPool.truncate``; acceptance is exported
+as ``serve_spec_*`` counters and ``metrics()["spec_accept_rate"]``.
+
 docs/serving.md documents the page/block/intern-chain/bucket vocabulary,
 the request data flow, the warmup lifecycle, and every CLI knob;
 docs/kernels.md documents the decode and chunked-prefill kernels this
@@ -178,6 +193,19 @@ def _sample_rows(logits, temps, keys):
     return jax.vmap(one)(logits, temps, keys)
 
 
+# key-derivation fold tags decorrelating the speculative streams from the
+# engine's per-(seed, output-index) decode keys and from each other
+_DRAFT_FOLD = 0x0D1A           # in-scan draft proposal sampling
+_ACCEPT_FOLD = 0xACC           # host-side accept/residual draws
+_BONUS_FOLD = 0xB0E5           # host-side bonus draw after a full accept
+
+
+def _softmax_np(x: np.ndarray) -> np.ndarray:
+    x = x - np.max(x)
+    e = np.exp(x)
+    return e / e.sum()
+
+
 class ContinuousEngine:
     """Request-level serving: ``submit()`` / ``step()`` / ``stream()``."""
 
@@ -192,7 +220,8 @@ class ContinuousEngine:
                  prefix_cache: Optional[bool] = None,
                  prefill_bucket_sizes: Optional[Sequence[int]] = None,
                  detokenizer: Optional[Callable[[int], str]] = None,
-                 async_detok: Optional[bool] = None):
+                 async_detok: Optional[bool] = None,
+                 draft_params=None, spec_k: int = 4):
         self.model = model
         self.params = params
         if paged_attn_impl is not None:
@@ -214,6 +243,18 @@ class ContinuousEngine:
             raise ValueError(
                 "prefix caching needs chunked suffix prefill, which this "
                 "model does not support (recurrent/hybrid/enc-dec layers)")
+        # speculative decoding: a (COALA-compressed) draft shares the target
+        # model's architecture, so its paged pool has identical geometry and
+        # the verifier is the chunked-prefill path scored at every position
+        self.draft_params = draft_params
+        self.spec_k = int(spec_k)
+        self._spec = draft_params is not None
+        if self._spec and not chunk_ok:
+            raise ValueError(
+                "speculative decoding needs the chunked (position-offset) "
+                "prefill path as its verifier (pure-attention LM)")
+        if self._spec and self.spec_k < 1:
+            raise ValueError("spec_k must be >= 1")
         # one registry per engine: pool and scheduler register their own
         # series into it, metrics() is a compatibility view over it, and
         # launch/serve.py --metrics-out writes its Prometheus exposition
@@ -224,7 +265,17 @@ class ContinuousEngine:
                               prefix_cache=self.prefix_cache,
                               registry=self.registry)
         self.scheduler = Scheduler(self.pool, max_running=max_running,
-                                   registry=self.registry)
+                                   registry=self.registry,
+                                   headroom_tokens=self.spec_k
+                                   if self._spec else 0)
+        # the draft decodes against its own pool (private registry: the
+        # engine registry's pool_* series describe the target pool), kept in
+        # lockstep with the target's — same allocs, commits, forks, frees —
+        # so cached-prefix hits and table shapes mirror exactly
+        self.draft_pool = BlockPool(
+            model, num_blocks=num_blocks, block_size=block_size,
+            max_requests=max_running, dtype=cache_dtype,
+            prefix_cache=self.prefix_cache) if self._spec else None
         # the paged read path needs attention layers that understand page
         # stores: decoder-only/VLM/hybrid LMs with plain GQA K/V caches
         # (MLA keeps latent caches; enc-dec models route through EncDecLM)
@@ -253,6 +304,8 @@ class ContinuousEngine:
         self._start_time: Optional[float] = None
         self._decode_shapes: set = set()
         self._prefill_shapes: set = set()
+        self._spec_shapes: set = set()          # draft-scan + verify rounds
+        self._draft_prefill_shapes: set = set()  # prefill run with draft params
         # async host pipeline: detokenize + stream callbacks run on the
         # worker's thread (lazily started on first emission); off = inline
         # synchronous delivery, the ordering/parity oracle
@@ -295,6 +348,17 @@ class ContinuousEngine:
             "serve_requests_finished_total", "requests run to completion")
         self._c_new_tokens = reg.counter(
             "serve_new_tokens_total", "tokens generated by finished requests")
+        if self._spec:
+            # registered only in speculative mode: the non-spec registry
+            # schema (docs/observability.md, tests/test_obs.py) is frozen
+            self._c_spec_rounds = reg.counter(
+                "serve_spec_rounds_total", "speculative draft+verify rounds")
+            self._c_spec_proposed = reg.counter(
+                "serve_spec_proposed_tokens_total",
+                "draft tokens proposed to the verifier")
+            self._c_spec_accepted = reg.counter(
+                "serve_spec_accepted_tokens_total",
+                "draft tokens accepted by the target")
         self._h_ttft = reg.histogram(
             "serve_ttft_seconds", LATENCY_BUCKETS,
             "arrival -> first generated token")
@@ -346,6 +410,47 @@ class ContinuousEngine:
         else:
             self._prefill_chunk_paged = None
         self._sample = jax.jit(_sample_rows)
+        if self._spec:
+            spec_steps = self.spec_k + 1
+
+            def _draft_scan(p, tok, cache, pos, bt, temps, seeds, offs):
+                # ONE dispatch proposes the whole k-token draft run: the
+                # scan feeds the last committed token then each proposal
+                # back in, sampling in-scan (keys derived in-graph from the
+                # request seeds, folded per output index — preemption-safe
+                # and decorrelated from the non-spec decode keys). One extra
+                # step (spec_steps = k + 1) writes the last proposal's K/V
+                # so a fully-accepted round leaves no hole in the draft
+                # cache; its sampled token is discarded.
+                base = jax.vmap(lambda s: jax.random.fold_in(
+                    jax.random.PRNGKey(s), _DRAFT_FOLD))(seeds)
+
+                def body(carry, i):
+                    tok_c, pos_c, cache_c = carry
+                    logits, cache_c = m.decode_step(
+                        p, tok_c, cache_c, pos_c, ctx=ctx, compute_dtype=cd,
+                        block_tables=bt)
+                    keys = jax.vmap(jax.random.fold_in)(base, offs + i)
+                    nxt = _sample_rows(logits, temps, keys)
+                    return (nxt[:, None], pos_c + 1, cache_c), (nxt, logits)
+
+                (_, _, cache), (props, logits) = jax.lax.scan(
+                    body, (tok, pos, cache), jnp.arange(spec_steps))
+                return props, logits, cache
+
+            self._spec_draft = jax.jit(_draft_scan, donate_argnums=(2,))
+
+            def _verify_fn(p, tk, c, pos, lens, bt):
+                logits, c = m.verify_chunk(p, tk, c, pos, lens, ctx=ctx,
+                                           compute_dtype=cd, block_tables=bt)
+                # greedy argmax computed in-graph so greedy rounds transfer
+                # (B, k+1) ints, not (B, k+1, vocab) logits
+                return logits, jnp.argmax(logits, -1).astype(jnp.int32), c
+
+            self._verify = jax.jit(_verify_fn, donate_argnums=(2,))
+        else:
+            self._spec_draft = None
+            self._verify = None
 
     # ------------------------------------------------------------------ API
     def submit(self, prompt_tokens, max_new_tokens: int, *,
@@ -369,7 +474,14 @@ class ContinuousEngine:
                       seed=seed, eos_id=eos_id, extras=extras, vis_offset=vis,
                       cacheable=self._chunk_ok and not extras and vis == 0,
                       stream_callback=stream_callback)
-        need = self.pool.blocks_for(req.cache_budget())
+        if self._spec and not req.cacheable:
+            raise ValueError(
+                "speculative decoding serves text-only chunked-prefill "
+                "requests (no extras / vision prefixes)")
+        # speculative verify transiently writes up to spec_k positions past
+        # the budget before rollback — the same headroom admission reserves
+        need = self.pool.blocks_for(req.cache_budget()
+                                    + (self.spec_k if self._spec else 0))
         if need > self.pool.usable_blocks:
             raise ValueError(
                 f"request needs {need} blocks ({req.cache_budget()} cache "
@@ -400,6 +512,12 @@ class ContinuousEngine:
             # suffix length both picks the batch group and feeds the prefill
             toks = req.prefill_tokens()
             cached = self.pool.alloc(req.req_id, len(toks), tokens=toks)
+            if self._spec:
+                # lockstep pools: the mirrored call sequence keeps the draft
+                # registry identical, so hits (and suffix shapes) match
+                dcached = self.draft_pool.alloc(req.req_id, len(toks),
+                                                tokens=toks)
+                assert dcached == cached, "draft pool diverged from target"
             self._c_prompt_tokens.inc(len(toks))
             self._c_prefix_hit_tokens.inc(cached)
             groups.setdefault(
@@ -413,7 +531,8 @@ class ContinuousEngine:
                 done.append(req)
         running = list(self.scheduler.running)
         if running:
-            done.extend(self._decode_step(running))
+            done.extend(self._spec_decode_step(running) if self._spec
+                        else self._decode_step(running))
         return done
 
     def fork(self, req_id: int, *, temperature: Optional[float] = None,
@@ -428,12 +547,20 @@ class ContinuousEngine:
             raise ValueError(f"request {req_id} is not running")
         if len(self.scheduler.running) >= self.scheduler.max_running:
             raise ValueError("running set full; cannot fork")
+        if seed is None:
+            # derive a distinct, deterministic child seed by folding the
+            # child's req_id into the parent's: defaulting to parent.seed
+            # would replay the parent's exact trajectory at temperature > 0,
+            # making best-of-n forks identical. Passing seed explicitly
+            # (including parent.seed) keeps the old behavior.
+            seed = parent.seed ^ ((0x9E3779B9 * (self._next_id + 1))
+                                  & 0x7FFFFFFF)
         child = Request(
             req_id=self._next_id, prompt=parent.prompt.copy(),
             max_new_tokens=parent.max_new_tokens,
             temperature=parent.temperature if temperature is None
             else temperature,
-            seed=parent.seed if seed is None else seed,
+            seed=seed,
             eos_id=parent.eos_id, extras=parent.extras,
             vis_offset=parent.vis_offset, cacheable=parent.cacheable)
         self._next_id += 1
@@ -445,6 +572,8 @@ class ContinuousEngine:
         child.arrival_time = parent.arrival_time
         child.first_token_time = parent.first_token_time
         self.pool.fork(parent.req_id, child.req_id)
+        if self._spec:
+            self.draft_pool.fork(parent.req_id, child.req_id)
         self.scheduler.adopt(child)
         return child.req_id
 
@@ -512,8 +641,12 @@ class ContinuousEngine:
         sit underneath it (``start + suffix <= max_len``), and each
         reachable offset yields one block envelope; without the prefix
         cache the offset is always 0. Returns ``(decode_sigs,
-        prefill_sigs)`` as lists of those tuples."""
-        nb_cap = _pow2_at_least(min(self.pool.blocks_for(max_len),
+        prefill_sigs)`` as lists of those tuples. In speculative mode the
+        decode sigs describe the draft-scan + verify rounds, whose block
+        envelope covers the ``spec_k`` transient tail positions a verify
+        round writes past the budget."""
+        span = max_len + (self.spec_k if self._spec else 0)
+        nb_cap = _pow2_at_least(min(self.pool.blocks_for(span),
                                     self.pool.usable_blocks))
         decode = []
         for b in self.bucket_sizes:
@@ -563,9 +696,15 @@ class ContinuousEngine:
         with trace.span("serve.warmup", max_len=max_len,
                         decode_sigs=len(decode_sigs),
                         prefill_sigs=len(prefill_sigs)):
-            self.pool.warm(self.pool.blocks_for(max_len))
+            span = max_len + (self.spec_k if self._spec else 0)
+            self.pool.warm(self.pool.blocks_for(span))
+            if self._spec:
+                self.draft_pool.warm(self.draft_pool.blocks_for(span))
             for b, nb, _ in decode_sigs:
-                self._warm_decode(b, nb)
+                if self._spec:
+                    self._warm_spec(b, nb)
+                else:
+                    self._warm_decode(b, nb)
             for b, l, nb in prefill_sigs:
                 self._warm_prefill(b, l, nb)
         self._warmed_decode = self.decode_compile_count()
@@ -605,28 +744,85 @@ class ContinuousEngine:
             self.pool.scatter_token([], cache, pos, rows=b, blocks=nb)
         self._warm_sample(jax.block_until_ready(logits), b)
 
-    def _warm_prefill(self, b: int, l: int, nb: int) -> None:
-        """Execute one batched suffix prefill at signature ``(b, l, nb)``
-        with zero rows (per-row lengths 1, offsets 0, all-trash tables)."""
-        sig = (b, l, nb)
-        if sig in self._prefill_shapes:
+    def _warm_spec(self, b: int, nb: int) -> None:
+        """Execute one speculative round — draft scan with the draft params
+        against the draft pool, then the verifier with the target params —
+        at signature ``(b, nb)`` with zero rows (all-trash tables)."""
+        sig = (b, nb, self.paged_kernel)
+        if sig in self._spec_shapes:
             return
-        self._prefill_shapes.add(sig)
-        tok = jnp.zeros((b, l), jnp.int32)
+        self._spec_shapes.add(sig)
+        k = self.spec_k
+        tok = jnp.zeros((b, 1), jnp.int32)
         pos = jnp.zeros((b,), jnp.int32)
-        ln = jnp.ones((b,), jnp.int32)
-        if self.prefill_kernel:
+        temps = jnp.zeros((b,), jnp.float32)
+        seeds = jnp.zeros((b,), jnp.uint32)
+        offs = jnp.zeros((b,), jnp.int32)
+        vtok = jnp.zeros((b, k + 1), jnp.int32)
+        lens = jnp.full((b,), k + 1, jnp.int32)
+        # the draft always runs gathered (see _spec_decode_step); only the
+        # verifier's read path follows the paged_kernel knob
+        dcache = self.draft_pool.gather_batch([], rows=b, blocks=nb)
+        props, _, dcache = self._spec_draft(
+            self.draft_params, tok, dcache, pos, None, temps, seeds, offs)
+        self.draft_pool.scatter_suffix([], dcache, [], [], rows=b,
+                                       blocks=nb)
+        if self.paged_kernel:
             tables = self.pool.padded_tables([], rows=b, blocks=nb)
             cache = self.pool.paged_cache([], rows=b)
-            logits, cache = self._prefill_chunk_paged(self.params, tok, cache,
-                                                      pos, ln, tables)
+            _, g, cache = self._verify(self.params, vtok, cache, pos, lens,
+                                       tables)
             self.pool.absorb_paged([], cache, rows=b)
         else:
             cache = self.pool.gather_batch([], rows=b, blocks=nb)
-            logits, cache = self._prefill_chunk(self.params, tok, cache,
-                                                pos, ln)
+            _, g, cache = self._verify(self.params, vtok, cache, pos, lens,
+                                       None)
             self.pool.scatter_suffix([], cache, [], [], rows=b, blocks=nb)
-        self._warm_sample(jax.block_until_ready(logits), b)
+        jax.block_until_ready((props, g))
+
+    def _warm_prefill(self, b: int, l: int, nb: int) -> None:
+        """Execute one batched suffix prefill at signature ``(b, l, nb)``
+        with zero rows (per-row lengths 1, offsets 0, all-trash tables).
+        In speculative mode the same signature also runs with the draft
+        params against the draft pool — a different params pytree is a
+        separate entry in the same jit cache."""
+        sig = (b, l, nb)
+        if sig not in self._prefill_shapes:
+            self._prefill_shapes.add(sig)
+            tok = jnp.zeros((b, l), jnp.int32)
+            pos = jnp.zeros((b,), jnp.int32)
+            ln = jnp.ones((b,), jnp.int32)
+            if self.prefill_kernel:
+                tables = self.pool.padded_tables([], rows=b, blocks=nb)
+                cache = self.pool.paged_cache([], rows=b)
+                logits, cache = self._prefill_chunk_paged(
+                    self.params, tok, cache, pos, ln, tables)
+                self.pool.absorb_paged([], cache, rows=b)
+            else:
+                cache = self.pool.gather_batch([], rows=b, blocks=nb)
+                logits, cache = self._prefill_chunk(self.params, tok, cache,
+                                                    pos, ln)
+                self.pool.scatter_suffix([], cache, [], [], rows=b, blocks=nb)
+            self._warm_sample(jax.block_until_ready(logits), b)
+        if self._spec and sig not in self._draft_prefill_shapes:
+            self._draft_prefill_shapes.add(sig)
+            tok = jnp.zeros((b, l), jnp.int32)
+            pos = jnp.zeros((b,), jnp.int32)
+            ln = jnp.ones((b,), jnp.int32)
+            if self.prefill_kernel:
+                dtables = self.draft_pool.padded_tables([], rows=b, blocks=nb)
+                dcache = self.draft_pool.paged_cache([], rows=b)
+                dlogits, dcache = self._prefill_chunk_paged(
+                    self.draft_params, tok, dcache, pos, ln, dtables)
+                jax.block_until_ready(dlogits)
+                self.draft_pool.absorb_paged([], dcache, rows=b)
+            else:
+                dcache = self.draft_pool.gather_batch([], rows=b, blocks=nb)
+                dlogits, dcache = self._prefill_chunk(self.draft_params, tok,
+                                                      dcache, pos, ln)
+                jax.block_until_ready(dlogits)
+                self.draft_pool.scatter_suffix([], dcache, [], [], rows=b,
+                                               blocks=nb)
 
     def _warm_sample(self, logits, b: int) -> None:
         """Warm the row sampler at batch bucket ``b`` (its jit signature
@@ -662,10 +858,15 @@ class ContinuousEngine:
         """Entries in the decode jit compile caches (the recompile counter
         that shape bucketing keeps ≤ the number of shape buckets)."""
         try:
-            return int(self._decode._cache_size()
-                       + self._decode_paged._cache_size())
+            n = int(self._decode._cache_size()
+                    + self._decode_paged._cache_size())
+            if self._spec_draft is not None:
+                n += int(self._spec_draft._cache_size())
+            if self._verify is not None:
+                n += int(self._verify._cache_size())
+            return n
         except AttributeError:   # older jax: fall back to signatures seen
-            return len(self._decode_shapes)
+            return len(self._decode_shapes) + len(self._spec_shapes)
 
     def prefill_compile_count(self) -> int:
         """Entries in the prefill jit caches: length-bucketed suffix batching
@@ -736,6 +937,18 @@ class ContinuousEngine:
             "warmup_seconds": self._warmup_seconds,
             "post_warmup_compiles": self.post_warmup_compiles(),
         }
+        if self._spec:
+            # speculative-mode-only keys: the non-spec metrics() schema is
+            # frozen (tests/test_obs.py golden keys)
+            proposed = self._c_spec_proposed.value
+            decode.update({
+                "spec_k": float(self.spec_k),
+                "spec_rounds": int(self._c_spec_rounds.value),
+                "spec_proposed_tokens": int(proposed),
+                "spec_accepted_tokens": int(self._c_spec_accepted.value),
+                "spec_accept_rate": (self._c_spec_accepted.value / proposed
+                                     if proposed > 0 else 0.0),
+            })
         if not fin:
             return {"requests": 0, "requests_per_sec": 0.0, "new_tokens": 0,
                     "tokens_per_sec": 0.0, "mean_ttft_s": float("nan"),
@@ -770,6 +983,8 @@ class ContinuousEngine:
 
     def _finish(self, req: Request) -> None:
         self.scheduler.evict(req)
+        if self._spec:
+            self.draft_pool.free(req.req_id)
         self.finished.append(req)
         self._c_finished.inc()
         self._c_new_tokens.inc(len(req.out_tokens))
@@ -847,8 +1062,11 @@ class ContinuousEngine:
         nb_pad = _pow2_at_least(max(self.pool.blocks_for(s + l_pad)
                                     for s in starts))
         sig = (b_pad, l_pad, nb_pad)
-        fresh = sig not in self._prefill_shapes
+        fresh = sig not in self._prefill_shapes or (
+            self._spec and sig not in self._draft_prefill_shapes)
         self._prefill_shapes.add(sig)
+        if self._spec:
+            self._draft_prefill_shapes.add(sig)
         if fresh:
             trace.instant("serve.prefill_compile", sig=str(sig))
         tok = np.zeros((b_pad, l_pad), np.int32)
@@ -875,6 +1093,30 @@ class ContinuousEngine:
                 logits = jax.block_until_ready(logits)
                 self.pool.scatter_suffix(ids, cache, starts, lens, rows=b_pad,
                                          blocks=nb_pad)
+            if self._spec:
+                # the draft prefills the same suffixes at the same offsets
+                # into its own pool (logits discarded — the first proposal
+                # chains off the target's sampled token)
+                with trace.span("serve.spec_draft_prefill", batch=len(group)):
+                    if self.prefill_kernel:
+                        dtables = self.draft_pool.padded_tables(
+                            ids, rows=b_pad, blocks=nb_pad)
+                        dcache = self.draft_pool.paged_cache(ids, rows=b_pad)
+                        dlogits, dcache = self._prefill_chunk_paged(
+                            self.draft_params, jnp.asarray(tok), dcache, pos,
+                            ln, dtables)
+                        jax.block_until_ready(dlogits)
+                        self.draft_pool.absorb_paged(ids, dcache, rows=b_pad)
+                    else:
+                        dcache = self.draft_pool.gather_batch(
+                            ids, rows=b_pad, blocks=nb_pad)
+                        dlogits, dcache = self._prefill_chunk(
+                            self.draft_params, jnp.asarray(tok), dcache, pos,
+                            ln)
+                        jax.block_until_ready(dlogits)
+                        self.draft_pool.scatter_suffix(
+                            ids, dcache, starts, lens, rows=b_pad,
+                            blocks=nb_pad)
         if not fresh:                       # steady-state timer: skip compiles
             self._c_prefill_seconds.inc(time.perf_counter() - t0)
             self._c_prefill_tokens.inc(sum(lens))
@@ -889,6 +1131,9 @@ class ContinuousEngine:
                 r.first_token_time = now
                 self._h_ttft.observe(r.ttft)
             self.pool.commit(r.req_id, r.prefill_tokens()[:r.cache_len])
+            if self._spec:
+                self.draft_pool.commit(r.req_id,
+                                       r.prefill_tokens()[:r.cache_len])
 
     def _decode_step(self, running: List[Request]) -> List[Request]:
         # reserve the next position for everyone, preempting the youngest
@@ -955,3 +1200,188 @@ class ContinuousEngine:
                 self._finish(r)
                 done.append(r)
         return done
+
+    def _spec_decode_step(self, running: List[Request]) -> List[Request]:
+        """One speculative round over the running set: the draft scan
+        proposes ``spec_k`` tokens per request, the target verifies all
+        ``spec_k + 1`` positions in one chunked call, accepted tokens (plus
+        the target's bonus/resample token) are emitted, and both pools roll
+        back to the accepted length (``truncate``).
+
+        Position bookkeeping: a round starts at ``c = cache_len`` with last
+        emitted token ``t`` not yet written. The draft writes positions
+        ``c .. c+k`` (feeding ``t, d_1 .. d_k``); the verifier writes the
+        same span with the same tokens and ``logits[i]`` scores the token
+        after position ``c + i``. Appending ``m`` accepted tokens advances
+        ``cache_len`` by ``m``, so the last-token-unwritten invariant and
+        draft/target lockstep hold for every acceptance count; stale K/V
+        past the accepted length sits at positions the next round rewrites
+        before any causal mask can read them."""
+        k = self.spec_k
+        # reserve the full verify span [c, c+k] in both pools, COW-securing
+        # every block it covers; preempt the youngest when the pool runs dry
+        while True:
+            try:
+                for r in running:
+                    self.pool.extend(r.req_id, r.cache_len + k + 1,
+                                     write_start=r.cache_len)
+                    self.draft_pool.extend(r.req_id, r.cache_len + k + 1,
+                                           write_start=r.cache_len)
+                break
+            except MemoryError:
+                victim = self.scheduler.preempt_youngest()
+                if victim is not None:
+                    self.draft_pool.free(victim.req_id)
+                running = [r for r in running if r is not victim]
+                if not running:
+                    raise MemoryError(
+                        "block pool too small for a single request")
+        ids = [r.req_id for r in running]
+        b_real = len(ids)
+        b_pad = self._bucket_batch(b_real)
+        nb_pad = _pow2_at_least(self.pool.max_table_blocks(ids))
+        sig = (b_pad, nb_pad, self.paged_kernel)
+        fresh = sig not in self._spec_shapes
+        self._spec_shapes.add(sig)
+        if fresh:
+            trace.instant("serve.spec_compile", sig=str(sig))
+        pad = b_pad - b_real
+        tok = jnp.asarray([[r.out_tokens[-1]] for r in running]
+                          + [[0]] * pad, jnp.int32)
+        pos = jnp.asarray([r.cache_len for r in running] + [0] * pad,
+                          jnp.int32)
+        temps = jnp.asarray([r.temperature for r in running] + [0.0] * pad,
+                            jnp.float32)
+        seeds = jnp.asarray([r.seed & 0x7FFFFFFF for r in running]
+                            + [0] * pad, jnp.uint32)
+        offs = jnp.asarray([len(r.out_tokens) for r in running] + [0] * pad,
+                           jnp.int32)
+        starts = [r.cache_len for r in running]
+        t0 = time.perf_counter()
+        with trace.span("serve.spec_step", batch=b_real, sig=str(sig)):
+            with trace.span("serve.spec_draft", batch=b_real):
+                # the draft always runs on the gathered contiguous envelope:
+                # one pool read before the scan, one suffix write-back after,
+                # so the k+1 in-scan steps touch only the (rows, envelope)
+                # scratch instead of round-tripping the full page stores per
+                # proposal (backends without buffer donation — CPU — rewrite
+                # every page per paged call; amortizing that per round
+                # instead of per token is most of the speculative speedup)
+                dcache = self.draft_pool.gather_batch(ids, rows=b_pad,
+                                                      blocks=nb_pad)
+                props, dlogits, dcache = self._spec_draft(
+                    self.draft_params, tok, dcache, pos, None, temps,
+                    seeds, offs)
+                self.draft_pool.scatter_suffix(
+                    ids, dcache, starts, [k + 1] * b_real, rows=b_pad,
+                    blocks=nb_pad)
+                props_h = np.asarray(props)          # (k+1, b_pad)
+            vtok = np.zeros((b_pad, k + 1), np.int32)
+            for i, r in enumerate(running):
+                vtok[i, 0] = r.out_tokens[-1]
+                vtok[i, 1:] = props_h[:k, i]
+            lens = jnp.full((b_pad,), k + 1, jnp.int32)
+            with trace.span("serve.spec_verify", batch=b_real):
+                if self.paged_kernel:
+                    tables = self.pool.padded_tables(ids, rows=b_pad,
+                                                     blocks=nb_pad)
+                    cache = self.pool.paged_cache(ids, rows=b_pad)
+                    vlogits, greedy, cache = self._verify(
+                        self.params, jnp.asarray(vtok), cache, pos, lens,
+                        tables)
+                    self.pool.absorb_paged(ids, cache, rows=b_pad)
+                else:
+                    cache = self.pool.gather_batch(ids, rows=b_pad,
+                                                   blocks=nb_pad)
+                    vlogits, greedy, cache = self._verify(
+                        self.params, jnp.asarray(vtok), cache, pos, lens,
+                        None)
+                    self.pool.scatter_suffix(
+                        ids, cache, starts, [k + 1] * b_real, rows=b_pad,
+                        blocks=nb_pad)
+                g = np.asarray(greedy)               # (b_pad, k+1)
+        # full distributions cross the host boundary only when some row
+        # actually samples; greedy rounds transfer just proposals + argmax
+        if any(r.temperature > 0.0 for r in running):
+            vlog = np.asarray(vlogits, np.float32)   # (b_pad, k+1, V)
+            dlog = np.asarray(dlogits, np.float32)   # (k+1, b_pad, V)
+        emitted = 0
+        done: List[Request] = []
+        for i, r in enumerate(running):
+            d = [int(t) for t in props_h[:k, i]]
+            r.spec_proposed += k
+            self._c_spec_proposed.inc(k)
+            if r.temperature <= 0.0:
+                n_acc = 0
+                while n_acc < k and d[n_acc] == int(g[i, n_acc]):
+                    n_acc += 1
+                toks = d[:n_acc] + [int(g[i, n_acc])]
+            else:
+                toks, n_acc = self._spec_accept_sampled(r, d, vlog[i],
+                                                        dlog[:, i])
+            r.spec_accepted += n_acc
+            self._c_spec_accepted.inc(n_acc)
+            keep: List[int] = []
+            for t in toks:
+                if len(r.out_tokens) + len(keep) >= r.max_new_tokens:
+                    break
+                keep.append(t)
+                if r.eos_id is not None and t == r.eos_id:
+                    break
+            r.cache_len += len(keep)
+            # rollback: both pools drop the uncommitted tail blocks the
+            # rejected proposals wrote
+            self.pool.truncate(r.req_id, r.cache_len)
+            self.draft_pool.truncate(r.req_id, r.cache_len)
+            for t in keep:
+                r.out_tokens.append(t)
+                self._emit_stream(r, t, r.done)
+            emitted += len(keep)
+            if self.prefix_cache and r.cacheable:
+                committed = r.prefill_tokens()[:r.cache_len]
+                self.pool.commit(r.req_id, committed)
+                self.draft_pool.commit(r.req_id, committed)
+            if r.done:
+                self._finish(r)
+                done.append(r)
+        self._c_decode_steps.inc()
+        self._c_spec_rounds.inc()
+        if not fresh:                       # steady-state timer: skip compiles
+            dt = time.perf_counter() - t0
+            self._c_decode_seconds.inc(dt)
+            self._c_decode_tokens.inc(emitted)
+            self._h_step.observe(dt)
+        return done
+
+    def _spec_accept_sampled(self, r: Request, d: List[int],
+                             vlog_row: np.ndarray, dlog_row: np.ndarray):
+        """Standard speculative rejection sampling for one temperature>0 row:
+        accept ``d_i`` w.p. ``min(1, p_i(d_i)/q_i(d_i))``; on the first
+        rejection draw from the residual ``norm(max(p_i - q_i, 0))``; after
+        a full accept draw the bonus token from ``p_{k+1}``. Draws are
+        seeded per (request seed, fold tag, output index) so a given round
+        is reproducible. ``vlog_row``/``dlog_row``: (k+1, V) target/draft
+        logits. Returns (tokens_to_append, n_accepted)."""
+        k = self.spec_k
+        base = len(r.out_tokens)
+        invt = 1.0 / r.temperature
+        toks: List[int] = []
+        for i in range(k):
+            p = _softmax_np(vlog_row[i] * invt)
+            q = _softmax_np(dlog_row[i] * invt)
+            rng = np.random.default_rng(
+                [r.seed & 0x7FFFFFFF, _ACCEPT_FOLD, base + i])
+            di = d[i]
+            if rng.random() * max(float(q[di]), 1e-30) < float(p[di]):
+                toks.append(di)
+                continue
+            res = np.maximum(p - q, 0.0)
+            s = float(res.sum())
+            probs = res / s if s > 0.0 else p
+            toks.append(int(rng.choice(probs.shape[0], p=probs)))
+            return toks, i
+        p = _softmax_np(vlog_row[k] * invt)
+        rng = np.random.default_rng(
+            [r.seed & 0x7FFFFFFF, _BONUS_FOLD, base + k])
+        toks.append(int(rng.choice(p.shape[0], p=p)))
+        return toks, k

@@ -377,10 +377,17 @@ class BlockPool:
         self._chain[req_id] = list(hit_pids)
         return len(hit_blocks) * self.block_size
 
-    def extend(self, req_id: int, n_tokens: int) -> None:
+    def extend(self, req_id: int, n_tokens: int, *,
+               write_start: Optional[int] = None) -> None:
         """Grow the request's table to cover ``n_tokens`` total tokens and
-        guarantee the block holding token ``n_tokens - 1`` is exclusively
-        owned (copy-on-write if it is shared with another request)."""
+        guarantee the written span is exclusively owned (copy-on-write if
+        shared with another request).
+
+        By default only the block holding token ``n_tokens - 1`` is made
+        writable (single-token decode). ``write_start`` widens the COW
+        guarantee to every block covering ``[write_start, n_tokens - 1]`` —
+        the speculative draft/verify paths write an L-token run that can
+        begin mid-block inside a fork-shared page."""
         table = self._tables[req_id]
         need = self.blocks_for(n_tokens) - len(table)
         if need > self.available_blocks:
@@ -391,7 +398,25 @@ class BlockPool:
             for b in blks:
                 self._ref[b] = 1
             table.extend(blks)
-        self._ensure_writable(req_id, n_tokens - 1)
+        lo = n_tokens - 1 if write_start is None else \
+            max(0, min(write_start, n_tokens - 1))
+        for i in range(lo // self.block_size,
+                       (n_tokens - 1) // self.block_size + 1):
+            self._ensure_writable(req_id, i * self.block_size
+                                  if i * self.block_size > lo else lo)
+
+    def truncate(self, req_id: int, n_tokens: int) -> None:
+        """Roll back the request's table to cover only ``n_tokens`` tokens,
+        releasing blocks past that point (speculative-decode rejection: the
+        uncommitted tail pages a rejected draft run wrote are dropped; a
+        registered or fork-shared block is decref'd, not clobbered)."""
+        table = self._tables[req_id]
+        keep = self.blocks_for(n_tokens)
+        while len(table) > keep:
+            self._decref(table.pop())
+        chain = self._chain.get(req_id)
+        if chain is not None and len(chain) > len(table):
+            del chain[len(table):]
 
     def _ensure_writable(self, req_id: int, pos: int) -> None:
         """Copy-on-write: the block containing ``pos`` must have refcount 1.

@@ -33,6 +33,10 @@ def _artifact():
         ("serve/post_warmup_compiles", 0),
         ("serve/offline_tok_per_s", "95.30"),
         ("serve/obs_overhead_pct", "1.25"),
+        ("serve/spec_accept_rate", "0.912"),
+        ("serve/spec_decode_speedup", "1.140"),
+        ("serve/spec_greedy_parity", "1.0"),
+        ("serve/spec_post_warmup_compiles", 0),
         ("dist/calib_sharded8_tok_per_s", "5400.0"),
         ("dist/r_gram_rel_err", "3.1e-07"),
     ]
@@ -90,6 +94,10 @@ def test_band_override_tightens(gate):
     ("serve/post_warmup_compiles", 3, "hard invariant"),
     ("serve/obs_overhead_pct", "7.5", "hard invariant"),
     ("serve/paged_vs_gather_decode_speedup", "0.90", "hard invariant"),
+    ("serve/spec_decode_speedup", "0.95", "hard invariant"),
+    ("serve/spec_greedy_parity", "0.0", "hard invariant"),
+    ("serve/spec_accept_rate", "0.0", "hard invariant"),
+    ("serve/spec_post_warmup_compiles", 2, "hard invariant"),
     ("dist/r_gram_rel_err", "2e-3", "hard invariant"),
 ])
 def test_hard_invariant_violations_fail(gate, name, value, frag):

@@ -5,8 +5,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import (
-    coala_factors, coala_project, coala_alpha_factors, eym_truncate,
-    r_from_x, rsvd_left_singvecs, weighted_error,
+    balanced_split, coala_factors, coala_project, coala_alpha_factors,
+    eym_truncate, r_from_x, rsvd_left_singvecs, weighted_error,
 )
 from repro.core import baselines, theory
 from repro.core.coala import mu_from_lambda
@@ -138,6 +138,70 @@ class TestProposition4:
         err_corda = jnp.linalg.norm((w - ac @ bc) @ gram)
         np.testing.assert_allclose(float(err_ours), float(err_corda),
                                    rtol=1e-3)
+
+    def test_alpha1_with_mu_equals_algorithm2(self):
+        """Regression: the α=1 fast path used to swallow any μ >= 0 — a
+        regularized request silently returned the unregularized solution.
+        With μ > 0 the α-path must match Algorithm 2 and differ from μ=0."""
+        w, x = _rand(16, 10, 40), _rand(10, 6, 41)       # k < n: ill-posed
+        mu = 0.5
+        a, b = coala_alpha_factors(w, x, rank=3, alpha=1.0, mu=mu)
+        res = coala_factors(w, x, rank=3, mu=mu)
+        np.testing.assert_allclose(np.asarray(a @ b), np.asarray(res.w_approx),
+                                   rtol=1e-4, atol=1e-5)
+        w0 = coala_project(w, x, rank=3)                 # μ = 0 solution
+        assert float(jnp.linalg.norm(a @ b - w0)) > 1e-3
+
+    def test_alpha2_with_mu_matches_direct_reference(self):
+        """μ-regularized α-family against a direct fp64 eigendecomposition
+        of W((XXᵀ)^α + μI)Wᵀ."""
+        w, x = _rand(18, 12, 42), _rand(12, 40, 43)
+        mu, r = 0.7, 4
+        a, b = coala_alpha_factors(w, x, rank=r, alpha=2.0, mu=mu)
+        w64, x64 = np.asarray(w, np.float64), np.asarray(x, np.float64)
+        gram = x64 @ x64.T
+        weight = gram @ gram + mu * np.eye(12)           # (XXᵀ)² + μI
+        evals, evecs = np.linalg.eigh(w64 @ weight @ w64.T)
+        u_r = evecs[:, np.argsort(evals)[::-1][:r]]
+        ref = u_r @ u_r.T @ w64
+        np.testing.assert_allclose(np.asarray(a @ b), ref, rtol=1e-3,
+                                   atol=1e-4)
+
+    def test_negative_mu_raises(self):
+        w, x = _rand(18, 12, 44), _rand(12, 40, 45)
+        with pytest.raises(ValueError, match="non-negative"):
+            coala_alpha_factors(w, x, rank=4, alpha=1.0, mu=-0.5)
+
+
+class TestBalancedSplit:
+    def test_geometric_mean_for_arbitrary_factors(self):
+        """Regression: the old scale sqrt(||B row||) assumed orthonormal A
+        columns; for arbitrary factors it left ||A col|| and ||B row||
+        unequal. The fix must equalize both at the geometric mean while
+        preserving the product, for badly scaled A."""
+        a = np.asarray(_rand(20, 5, 46)) * \
+            np.array([1e-3, 1e-2, 1.0, 1e2, 1e3])[None, :]
+        b = np.asarray(_rand(5, 14, 47))
+        a2, b2 = balanced_split(jnp.asarray(a), jnp.asarray(b))
+        np.testing.assert_allclose(np.asarray(a2 @ b2), a @ b,
+                                   rtol=1e-4, atol=1e-5)
+        an = np.linalg.norm(np.asarray(a2), axis=0)
+        bn = np.linalg.norm(np.asarray(b2), axis=1)
+        np.testing.assert_allclose(an, bn, rtol=1e-4)
+        geo = np.sqrt(np.linalg.norm(a, axis=0) * np.linalg.norm(b, axis=1))
+        np.testing.assert_allclose(an, geo, rtol=1e-4)
+
+    def test_orthonormal_a_keeps_old_behavior(self):
+        """With orthonormal A columns (the COALA U_r case) the geometric
+        mean reduces to the old sqrt(||B row||) scaling."""
+        a = jnp.linalg.qr(_rand(20, 5, 48))[0]
+        b = _rand(5, 14, 49)
+        a2, b2 = balanced_split(a, b)
+        expect = np.sqrt(np.linalg.norm(np.asarray(b), axis=1))
+        np.testing.assert_allclose(np.linalg.norm(np.asarray(a2), axis=0),
+                                   expect, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(a2 @ b2), np.asarray(a @ b),
+                                   rtol=1e-4, atol=1e-5)
 
 
 class TestRSVD:

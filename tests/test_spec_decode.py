@@ -1,0 +1,290 @@
+"""Self-speculative serving: draft proposal scan, chunked verifier, pool
+rollback, fork seed derivation.
+
+The load-bearing invariant is token-exactness: under greedy decoding the
+speculative engine must emit byte-identical trajectories to the
+non-speculative continuous engine AND to the fixed-batch oracle, for any
+draft (acceptance only changes speed, never tokens) — including staggered
+mixed-length traffic where rounds interleave with admissions. Warmup must
+keep its zero-stall contract with the draft's scan/verify/prefill
+signatures in the closed jit set. ``BlockPool.truncate`` is the rollback
+primitive rejected proposals rely on; ``fork()`` must give children
+distinct default seeds (the bug: children replayed the parent trajectory
+at temperature > 0)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serve import BlockPool, ContinuousEngine, ServeEngine
+
+MAX_LEN = 16
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = get_smoke_config("smollm_135m")
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def draft_params(smollm):
+    """A genuinely different draft: the same weights perturbed enough that
+    verification rejects some proposals (exercising rollback + resume)."""
+    _, _, params = smollm
+    def perturb(path, leaf):
+        if getattr(leaf, "ndim", 0) < 2:
+            return leaf
+        key = jax.random.PRNGKey(len(jax.tree_util.keystr(path)))
+        return leaf + 0.02 * jax.random.normal(key, leaf.shape, leaf.dtype)
+    return jax.tree_util.tree_map_with_path(perturb, params)
+
+
+def _engine(model, params, *, draft=None, spec_k=3, **kw):
+    kw.setdefault("block_size", 4)
+    kw.setdefault("num_blocks", 64)
+    kw.setdefault("max_running", 4)
+    return ContinuousEngine(model, params, compute_dtype=jnp.float32,
+                            cache_dtype=jnp.float32, draft_params=draft,
+                            spec_k=spec_k, **kw)
+
+
+def _staggered_trace(cfg, seed=0):
+    rng = np.random.RandomState(seed)
+    lens, news = [3, 9, 5, 12], [5, 3, 7, 2]
+    return [(rng.randint(0, cfg.vocab_size, (l,)).astype(np.int32), n)
+            for l, n in zip(lens, news)]
+
+
+class TestBlockPoolTruncate:
+    def test_truncate_releases_tail_blocks(self, smollm):
+        _, model, _ = smollm
+        pool = BlockPool(model, num_blocks=16, block_size=4, max_requests=4,
+                         dtype=jnp.float32)
+        pool.alloc(1, 6)                     # 2 blocks
+        pool.extend(1, 14, write_start=6)    # speculative span -> 4 blocks
+        assert len(pool.table(1)) == 4
+        free_before = pool.free_blocks
+        pool.truncate(1, 7)                  # roll back to 7 positions
+        assert len(pool.table(1)) == 2
+        assert pool.free_blocks == free_before + 2
+        pool.extend(1, 14, write_start=7)    # next round re-reserves
+        assert len(pool.table(1)) == 4
+        pool.truncate(1, 8)                  # exactly block-aligned
+        assert len(pool.table(1)) == 2
+        pool.free(1)
+
+    def test_truncate_keeps_shared_blocks_alive(self, smollm):
+        """Rollback on a fork must only drop the child's references; the
+        parent's view of the shared blocks survives."""
+        _, model, _ = smollm
+        pool = BlockPool(model, num_blocks=16, block_size=4, max_requests=4,
+                         dtype=jnp.float32)
+        pool.alloc(1, 8)
+        pool.fork(1, 2)
+        pool.extend(2, 12, write_start=8)
+        pool.truncate(2, 9)
+        assert len(pool.table(1)) == 2       # parent untouched
+        assert len(pool.table(2)) == 3
+        pool.free(2)
+        assert len(pool.table(1)) == 2
+        pool.free(1)
+
+
+class TestForkSeeds:
+    def test_children_get_distinct_default_seeds(self, smollm):
+        """The fork bug: with no explicit seed the child inherited the
+        parent's, so every best-of-n branch replayed the same trajectory at
+        temperature > 0. Children must diverge from the parent and from
+        each other by default."""
+        cfg, model, params = smollm
+        eng = _engine(model, params, max_running=4)
+        rng = np.random.RandomState(3)
+        prompt = rng.randint(0, cfg.vocab_size, (6,)).astype(np.int32)
+        pid = eng.submit(prompt, 8, temperature=1.2, seed=11)
+        eng.step()
+        c1 = eng.fork(pid)
+        c2 = eng.fork(pid)
+        fin = {r.req_id: r for r in eng.run()}
+        assert fin[c1].seed != fin[pid].seed
+        assert fin[c2].seed != fin[pid].seed
+        assert fin[c1].seed != fin[c2].seed
+        trajectories = {tuple(fin[i].out_tokens) for i in (pid, c1, c2)}
+        assert len(trajectories) == 3, "forked children replayed the parent"
+
+    def test_explicit_seed_reproduces_parent(self, smollm):
+        """Passing the parent's seed explicitly keeps the old replay
+        behavior available on demand."""
+        cfg, model, params = smollm
+        eng = _engine(model, params, max_running=4)
+        rng = np.random.RandomState(4)
+        prompt = rng.randint(0, cfg.vocab_size, (6,)).astype(np.int32)
+        pid = eng.submit(prompt, 8, temperature=1.2, seed=11)
+        eng.step()
+        cid = eng.fork(pid, seed=11)
+        fin = {r.req_id: r for r in eng.run()}
+        assert fin[cid].out_tokens == fin[pid].out_tokens
+
+
+class TestSpecGreedyParity:
+    def test_matches_nonspec_engine_and_oracle(self, smollm, draft_params):
+        """Staggered mixed-length trace: every request served speculatively
+        must match both the non-speculative continuous engine and a solo
+        fixed-batch run, token for token."""
+        cfg, model, params = smollm
+        spec = _engine(model, params, draft=draft_params, max_running=3)
+        plain = _engine(model, params, max_running=3)
+        leg = ServeEngine(model, params, compute_dtype=jnp.float32,
+                          cache_dtype=jnp.float32)
+        reqs = _staggered_trace(cfg)
+        ids_s, ids_p = [], []
+        for p, n in reqs:
+            ids_s.append(spec.submit(p, n))
+            spec.step()                      # joiners land mid-round
+            ids_p.append(plain.submit(p, n))
+            plain.step()
+        spec.run()
+        plain.run()
+        fin_s = {r.req_id: r for r in spec.finished}
+        fin_p = {r.req_id: r for r in plain.finished}
+        for (p, n), sid, pid in zip(reqs, ids_s, ids_p):
+            ref = np.asarray(leg.generate(jnp.asarray(p)[None],
+                                          max_new_tokens=n))[0, len(p):]
+            np.testing.assert_array_equal(
+                ref, np.asarray(fin_s[sid].out_tokens),
+                err_msg=f"spec request {sid} diverged from fixed-batch oracle")
+            assert fin_s[sid].out_tokens == fin_p[pid].out_tokens
+        m = spec.metrics()
+        assert m["spec_rounds"] > 0
+        assert m["spec_proposed_tokens"] > 0
+        # the perturbed draft must actually exercise the rejection path
+        assert m["spec_accept_rate"] < 1.0
+
+    def test_identical_draft_accepts_everything(self, smollm):
+        """draft == target: every proposal matches the verifier argmax, so
+        acceptance is exactly 1.0 and eos/max-new truncation still holds."""
+        cfg, model, params = smollm
+        eng = _engine(model, params, draft=params)
+        rng = np.random.RandomState(5)
+        for n, nn in ((5, 9), (8, 6)):
+            eng.submit(rng.randint(0, cfg.vocab_size, (n,)).astype(np.int32),
+                       nn)
+        fin = eng.run()
+        assert sorted(len(r.out_tokens) for r in fin) == [6, 9]
+        assert eng.metrics()["spec_accept_rate"] == 1.0
+
+    def test_gather_path_parity(self, smollm, draft_params):
+        """The gather (non-paged) read path is the in-tree oracle; the
+        speculative round must be token-exact there too."""
+        cfg, model, params = smollm
+        spec = _engine(model, params, draft=draft_params, paged_kernel=False,
+                       prefill_kernel=False)
+        leg = ServeEngine(model, params, compute_dtype=jnp.float32,
+                          cache_dtype=jnp.float32)
+        rng = np.random.RandomState(6)
+        p = rng.randint(0, cfg.vocab_size, (7,)).astype(np.int32)
+        rid = spec.submit(p, 8)
+        fin = {r.req_id: r for r in spec.run()}
+        ref = np.asarray(leg.generate(jnp.asarray(p)[None],
+                                      max_new_tokens=8))[0, 7:]
+        np.testing.assert_array_equal(ref, np.asarray(fin[rid].out_tokens))
+
+    def test_preemption_under_spec(self, smollm, draft_params):
+        """A pool too small for the full load forces preemption mid-round;
+        preempted requests must still finish on the greedy trajectory."""
+        cfg, model, params = smollm
+        spec = _engine(model, params, draft=draft_params, block_size=2,
+                       num_blocks=16, max_running=3, spec_k=2)
+        leg = ServeEngine(model, params, compute_dtype=jnp.float32,
+                          cache_dtype=jnp.float32)
+        rng = np.random.RandomState(7)
+        prompts = [rng.randint(0, cfg.vocab_size, (4,)).astype(np.int32)
+                   for _ in range(3)]
+        ids = [spec.submit(p, 6) for p in prompts]
+        fin = {r.req_id: r for r in spec.run()}
+        assert sum(r.preemptions for r in fin.values()) > 0
+        for p, rid in zip(prompts, ids):
+            ref = np.asarray(leg.generate(jnp.asarray(p)[None],
+                                          max_new_tokens=6))[0, 4:]
+            np.testing.assert_array_equal(ref,
+                                          np.asarray(fin[rid].out_tokens))
+
+
+class TestSpecSampling:
+    def test_temperature_rows_terminate_and_mix_with_greedy(self, smollm,
+                                                            draft_params):
+        """Greedy and sampled requests share one speculative batch; the
+        greedy row stays on the deterministic trajectory and the sampled
+        rows complete with the right lengths."""
+        cfg, model, params = smollm
+        spec = _engine(model, params, draft=draft_params)
+        leg = ServeEngine(model, params, compute_dtype=jnp.float32,
+                          cache_dtype=jnp.float32)
+        rng = np.random.RandomState(8)
+        p = rng.randint(0, cfg.vocab_size, (5,)).astype(np.int32)
+        gid = spec.submit(p, 6, temperature=0.0)
+        s1 = spec.submit(p, 6, temperature=1.5, seed=7)
+        s2 = spec.submit(p, 6, temperature=1.5, seed=8)
+        fin = {r.req_id: r for r in spec.run()}
+        ref = np.asarray(leg.generate(jnp.asarray(p)[None],
+                                      max_new_tokens=6))[0, 5:]
+        np.testing.assert_array_equal(ref, np.asarray(fin[gid].out_tokens))
+        assert len(fin[s1].out_tokens) == 6
+        assert len(fin[s2].out_tokens) == 6
+        # different seeds take different sampled trajectories
+        assert fin[s1].out_tokens != fin[s2].out_tokens
+
+    def test_sampled_run_is_seed_deterministic(self, smollm, draft_params):
+        """Same seed, two fresh engines: the spec sampling path (in-scan
+        proposal keys + host accept/bonus draws) is fully deterministic."""
+        cfg, model, params = smollm
+        rng = np.random.RandomState(9)
+        p = rng.randint(0, cfg.vocab_size, (5,)).astype(np.int32)
+        outs = []
+        for _ in range(2):
+            eng = _engine(model, params, draft=draft_params)
+            rid = eng.submit(p, 7, temperature=1.2, seed=13)
+            fin = {r.req_id: r for r in eng.run()}
+            outs.append(fin[rid].out_tokens)
+        assert outs[0] == outs[1]
+
+
+class TestSpecWarmup:
+    def test_zero_compiles_after_warmup(self, smollm, draft_params):
+        """The zero-stall contract survives speculation: draft scan, verify
+        chunk, and draft-params prefill all join the closed warmed set."""
+        cfg, model, params = smollm
+        eng = _engine(model, params, draft=draft_params, block_size=4,
+                      num_blocks=24, max_running=2,
+                      prefill_bucket_sizes=(8,))
+        eng.warmup(max_len=MAX_LEN)
+        base_decode = eng.decode_compile_count()
+        base_prefill = eng.prefill_compile_count()
+        rng = np.random.RandomState(10)
+        mk = lambda n: rng.randint(1, cfg.vocab_size, (n,)).astype(np.int32)
+        for prompt, nn in [(mk(8), 6), (mk(3), 5), (mk(10), 4), (mk(2), 6)]:
+            eng.submit(prompt, nn)
+            eng.step()
+        eng.run()
+        assert eng.post_warmup_compiles() == 0
+        assert eng.decode_compile_count() == base_decode
+        assert eng.prefill_compile_count() == base_prefill
+        assert eng.metrics()["post_warmup_compiles"] == 0
+        assert eng.metrics()["spec_rounds"] > 0
+
+
+class TestSpecGuards:
+    def test_spec_rejects_extras_requests(self, smollm, draft_params):
+        _, model, params = smollm
+        eng = _engine(model, params, draft=draft_params)
+        with pytest.raises(ValueError, match="text-only"):
+            eng.submit(np.zeros((4,), np.int32), 4,
+                       extras={"frames": np.zeros((1, 2, 2), np.float32)})
+
+    def test_spec_k_must_be_positive(self, smollm, draft_params):
+        _, model, params = smollm
+        with pytest.raises(ValueError, match="spec_k"):
+            _engine(model, params, draft=draft_params, spec_k=0)

@@ -18,7 +18,10 @@ Checks, per artifact:
   3. **Hard invariants** — non-negotiable acceptance rows enforced from
      this file, not the baseline, so editing a baseline can never relax
      them: ``serve/post_warmup_compiles == 0``, ``serve/obs_overhead_pct <
-     5``, ``serve/paged_vs_gather_decode_speedup >= 1`` and
+     5``, ``serve/paged_vs_gather_decode_speedup >= 1``, the speculative
+     rows (``serve/spec_greedy_parity == 1``, ``serve/spec_accept_rate >
+     0``, ``serve/spec_decode_speedup >= 1``,
+     ``serve/spec_post_warmup_compiles == 0``) and
      ``dist/r_gram_rel_err < 1e-3`` (each required whenever the artifact
      ran that suite).
   4. **Baseline comparisons** — each baseline row carries a ``kind``:
@@ -60,6 +63,10 @@ HARD_INVARIANTS = {
         ("serve/post_warmup_compiles", "==", 0.0),
         ("serve/obs_overhead_pct", "<", 5.0),
         ("serve/paged_vs_gather_decode_speedup", ">=", 1.0),
+        ("serve/spec_greedy_parity", "==", 1.0),
+        ("serve/spec_accept_rate", ">", 0.0),
+        ("serve/spec_decode_speedup", ">=", 1.0),
+        ("serve/spec_post_warmup_compiles", "==", 0.0),
     ],
     "dist": [
         ("dist/r_gram_rel_err", "<", 1e-3),
