@@ -350,9 +350,8 @@ def bench_serving():
     pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
                                     global_batch=4), cfg)
     cal = calibrate_model(model, params, [pipe.get_batch(i) for i in range(2)])
-    cparams, _ = compress_model(
-        model, params, cal,
-        CompressConfig(method="coala", ratio=0.6, lam=4.0, mu=-1.0))
+    ccfg = CompressConfig(method="coala", ratio=0.6, lam=4.0, mu=-1.0)
+    cparams, creports = compress_model(model, params, cal, ccfg)
     # skewed mixed lengths: long decodes + short joiners, so the bucketed
     # (B, pow2-blocks) envelope the gather path must materialize each step
     # well exceeds live pool usage — the padding the paged path never copies
@@ -625,6 +624,83 @@ def bench_serving():
          "acceptance: == 1.0")
     _row("serve/spec_post_warmup_compiles", ms0["post_warmup_compiles"],
          "draft scan + verify join the warmed jit set; acceptance: == 0")
+
+    # live-traffic recalibration: a sampled fraction of served activations
+    # streams back into COALA calibration and, once the data/cond/bound
+    # gates clear, rank-pinned recompressed factors hot-swap into the live
+    # engine between steps. Rows:
+    #   * greedy parity — an engine hot-swapping bitwise-identical factors
+    #     every step emits exactly the tokens a never-swapped engine does
+    #     (the value-swap no-op; in-flight requests keep their KV pages);
+    #   * swaps / post_warmup_compiles — the real recalibration serve
+    #     performs >= 1 bound-cleared swap with zero retraces after warmup
+    #     (rank-stable shapes hit the live jit cache);
+    #   * r_gram_rel_err — traffic-captured R equals an offline Calibrator
+    #     fed the same sampled streams, as RᵀR (causal-replay parity).
+    from repro.core.calibrate import Calibrator
+    from repro.core.compress import rank_map_from_reports
+    from repro.serve import RecalibPolicy, RecalibWorker, TrafficCalibrator
+    rtrace = synthetic_trace(6, cfg.vocab_size, min_prompt=8, max_prompt=20,
+                             max_new=16, arrival_every=2, seed=3)
+    rkw = dict(compute_dtype=jnp.float32, cache_dtype=jnp.float32,
+               block_size=8, num_blocks=64, max_running=4,
+               bucket_sizes=(4,), prefix_cache=False)
+
+    plain = ContinuousEngine(model, cparams, **rkw)
+    serve_trace(plain, rtrace)
+    ident = ContinuousEngine(model, cparams, **rkw)
+    pending = list(rtrace)
+    step = 0
+    while pending or ident.has_work():
+        while pending and pending[0][0] <= step:
+            _, prompt, nn = pending.pop(0)
+            ident.submit(prompt, nn)
+        ident.step()
+        if ident.scheduler.running:        # swap while requests in flight
+            ident.hot_swap(jax.tree.map(jnp.copy, ident.params))
+        step += 1
+    ident.flush_stream()
+
+    def out_tokens(eng):
+        return [list(r.out_tokens)
+                for r in sorted(eng.finished, key=lambda r: r.req_id)]
+
+    _row("serve/recalib_greedy_parity",
+         f"{float(out_tokens(ident) == out_tokens(plain)):.1f}",
+         "per-step identity hot-swaps leave the token stream bit-exact; "
+         "acceptance: == 1.0")
+
+    reng = ContinuousEngine(model, cparams, **rkw)
+    reng.warmup(max_len=max(len(p) + nn for _, p, nn in rtrace))
+    tcal = TrafficCalibrator(
+        model, policy=RecalibPolicy(check_every=1, min_new_tokens=16))
+    worker = RecalibWorker(model, params, tcal, ccfg,
+                           rank_map=rank_map_from_reports(creports))
+    reng.attach_recalibrator(worker)
+    mr = serve_trace(reng, rtrace)
+    _row("serve/recalib_swaps", worker.swaps,
+         f"bound-cleared hot-swaps over {worker.solve_attempts} solve "
+         f"attempts ({tcal.captured_tokens} captured tokens); "
+         "acceptance: >= 1")
+    _row("serve/recalib_post_warmup_compiles", mr["post_warmup_compiles"],
+         "rank-pinned factor swaps hit the warmed jit set; acceptance: == 0")
+    _row("serve/recalib_swap_ms", f"{worker.last_swap_seconds * 1e3:.3f}",
+         "wall time of the last hot_swap (validate + assign, no drain)")
+    _row("serve/recalib_tokens_to_clearance", worker.tokens_at_first_swap,
+         "captured tokens streamed before the first bound-cleared swap")
+
+    offline = Calibrator()
+    for stream in tcal.captured_streams:
+        model.capture_forward(params, {"tokens": jnp.asarray(stream)[None]},
+                              offline)
+    rf_t, rf_o = tcal.r_factors(), offline.r_factors()
+    gram_rel = max(
+        float(jnp.linalg.norm(rf_t[p].T @ rf_t[p] - rf_o[p].T @ rf_o[p])
+              / jnp.linalg.norm(rf_o[p].T @ rf_o[p]))
+        for p in rf_o)
+    _row("serve/recalib_r_gram_rel_err", f"{gram_rel:.2e}",
+         "traffic R vs offline replay of the same streams, as R^T R; "
+         "acceptance: < 1e-3")
 
 
 # ---------------------------------------------------------------------------

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.tsqr import RStreamer, square_r
+from repro.kernels import ops as kops
 from repro.models.linear import CaptureDict
 from repro.obs import trace
 
@@ -66,10 +67,16 @@ class Calibrator:
             for i in range(0, flat.shape[0], self.max_tokens):
                 self.streams[path].update(flat[i:i + self.max_tokens])
             if self.collect_gram:
-                from repro.kernels import ops as kops
                 g = kops.gram_accum(flat)
                 self.grams[path] = g if path not in self.grams \
                     else self.grams[path] + g
+
+    def reset(self) -> None:
+        """Drop every accumulated stream and Gram, keeping the capture
+        wiring intact — a rolling traffic window (serve/recalibrate.py)
+        starts its next window on the same instance."""
+        self.streams.clear()
+        self.grams.clear()
 
     # ------------------------------------------------------------ results
     def r_factors(self) -> Dict[str, jax.Array]:

@@ -193,15 +193,31 @@ def compress_params(params, r_factors: Dict[str, jax.Array],
     return new_params, reports
 
 
-def compress_model(model, params, calibrator, ccfg: CompressConfig):
+def rank_map_from_reports(reports) -> Dict[str, int]:
+    """Pin per-layer ranks from a previous compression's reports, keyed by
+    full calibrator path. Recompressing with this map is *shape-stable*:
+    the new factors have identical shapes/dtypes to the old ones, which is
+    what live hot-swaps (serve/recalibrate.py) rely on to hit the serving
+    engine's existing jit cache entries. Per-expert rows (path suffix
+    '/e<i>') describe stacked expert banks, not standalone linears, and
+    are skipped — expert ranks re-derive from the same ccfg."""
+    import re
+    return {r.path: r.rank for r in reports
+            if not re.search(r"/e\d+$", r.path)}
+
+
+def compress_model(model, params, calibrator, ccfg: CompressConfig, *,
+                   rank_map: Optional[Dict[str, int]] = None):
     """End-to-end: calibrator R factors -> compressed params + report.
 
     The calibrator keys look like 'blocks/2/sub0/mixer/wq'; stacked block
     params are compressed per-layer by slicing rep r, compressing, and
-    re-stacking (each rep has its own activations, as in the paper)."""
+    re-stacking (each rep has its own activations, as in the paper).
+    ``rank_map`` (full paths -> rank) overrides both the uniform ratio and
+    adaptive allocation — recompression passes pin it from the previous
+    reports (``rank_map_from_reports``) so factor shapes stay stable."""
     r_factors = calibrator.r_factors()
-    rank_map = None
-    if getattr(ccfg, "adaptive_rank", False):
+    if rank_map is None and getattr(ccfg, "adaptive_rank", False):
         from repro.core.rank_alloc import adaptive_rank_map
         weights = {}
 

@@ -69,7 +69,10 @@ def serve_trace(engine: ContinuousEngine, trace, *, temperature: float = 0.0):
 def _compressed_params(cfg, model, params, pipe, ratio: float,
                        draft_ratio: float = 0.0):
     """COALA-compress at ``ratio``; with ``draft_ratio`` also build the
-    harder-compressed speculative draft from the same calibration pass."""
+    harder-compressed speculative draft from the same calibration pass.
+    Returns ``(params, draft_params, reports, draft_reports)`` — the
+    reports carry the per-layer ranks live recalibration pins its
+    shape-stable rank maps from."""
     cal = calibrate_model(model, params, [pipe.get_batch(i) for i in range(2)])
     ccfg = CompressConfig(method="coala", ratio=ratio, lam=4.0, mu=-1.0)
     if draft_ratio > 0:
@@ -77,10 +80,10 @@ def _compressed_params(cfg, model, params, pipe, ratio: float,
             model, params, cal, ccfg, draft_ratio=draft_ratio)
         print("compression:", compression_summary(reports))
         print("draft compression:", compression_summary(dreports))
-        return cparams, dparams
+        return cparams, dparams, reports, dreports
     cparams, reports = compress_model(model, params, cal, ccfg)
     print("compression:", compression_summary(reports))
-    return cparams, None
+    return cparams, None, reports, None
 
 
 def _parse_buckets(spec: str):
@@ -93,8 +96,8 @@ def run_continuous(args, cfg, model, params, pipe):
         print("no requests to serve")
         return None
     ratio = args.compress_ratio if args.compress_ratio > 0 else 0.6
-    cparams, dparams = _compressed_params(cfg, model, params, pipe, ratio,
-                                          draft_ratio=args.draft_ratio)
+    cparams, dparams, reports, dreports = _compressed_params(
+        cfg, model, params, pipe, ratio, draft_ratio=args.draft_ratio)
     trace = synthetic_trace(args.requests, cfg.vocab_size, seed=args.seed,
                             max_new=args.new_tokens,
                             shared_prefix=args.shared_prefix)
@@ -119,6 +122,30 @@ def run_continuous(args, cfg, model, params, pipe):
                                    args.prefill_bucket_sizes),
                                async_detok=args.detok_async == "on",
                                draft_params=dparams, spec_k=args.spec_k)
+        worker = None
+        if args.calibrate_from_traffic and name == "coala":
+            # stream this engine's own traffic back into calibration and
+            # hot-swap refreshed factors once the error bound clears; the
+            # dense engine serves unmodified, as the parity reference
+            from repro.core.compress import rank_map_from_reports
+            from repro.serve import (RecalibPolicy, RecalibWorker,
+                                     TrafficCalibrator)
+            policy = RecalibPolicy(
+                sample_rate=args.recalib_sample_rate,
+                min_token_factor=args.recalib_min_token_factor,
+                max_residual_excess=args.recalib_max_residual_excess,
+                check_every=args.recalib_check_every)
+            tcal = TrafficCalibrator(model, policy=policy, seed=args.seed)
+            ccfg = CompressConfig(method="coala", ratio=ratio, lam=4.0,
+                                  mu=-1.0)
+            worker = RecalibWorker(
+                model, params, tcal, ccfg,
+                rank_map=rank_map_from_reports(reports),
+                draft_ratio=args.draft_ratio,
+                draft_rank_map=rank_map_from_reports(dreports)
+                if dreports else None,
+                async_solve=args.recalib_async == "on")
+            eng.attach_recalibrator(worker)
         if args.warmup == "on":
             w = eng.warmup(max_len=warm_len)
             print(f"[{name}] warmup: {w['warmup_seconds']:.2f}s for "
@@ -155,6 +182,16 @@ def run_continuous(args, cfg, model, params, pipe):
                   f"accept rate {m['spec_accept_rate']:.2f} "
                   f"({int(m['spec_accepted_tokens'])}/"
                   f"{int(m['spec_proposed_tokens'])} draft tokens)")
+        if worker is not None:
+            s = worker.summary()
+            print(f"[{name}] recalibration: {s['swaps']} hot-swaps over "
+                  f"{s['solve_attempts']} solve attempts, "
+                  f"{s['sampled_requests']} sampled requests / "
+                  f"{s['captured_tokens']} captured tokens, "
+                  f"data clearance {s['clearance']:.2f}, "
+                  f"residual excess {s['residual_excess']:.2f}, "
+                  f"status {s['status']}; "
+                  f"{m['post_warmup_compiles']} post-warmup compiles")
         prefill_path = "chunked-kernel" if eng.prefill_kernel else "gather"
         print(f"[{name}] prefill ({prefill_path}): "
               f"{m['prefill_tok_per_s']:.1f} suffix tok/s steady-state, "
@@ -172,8 +209,8 @@ def run_continuous(args, cfg, model, params, pipe):
 
 def run_fixed(args, cfg, model, params, pipe):
     if args.compress_ratio > 0:
-        params, _ = _compressed_params(cfg, model, params, pipe,
-                                       args.compress_ratio)
+        params, _, _, _ = _compressed_params(cfg, model, params, pipe,
+                                             args.compress_ratio)
     eng = ServeEngine(model, params, compute_dtype=jnp.float32,
                       cache_dtype=jnp.float32)
     batch = pipe.get_batch(0)
@@ -244,6 +281,34 @@ def main():
                     help="run detokenize + stream callbacks on the "
                          "background worker thread (off: inline on the "
                          "dispatch thread, the ordering oracle)")
+    ap.add_argument("--calibrate-from-traffic", action="store_true",
+                    help="stream a sampled fraction of served activations "
+                         "into COALA calibration and hot-swap recompressed "
+                         "factors into the live engine (no drain) once the "
+                         "error bound clears; applies to the coala engine "
+                         "of the continuous comparison, and to the draft "
+                         "too when --draft-ratio is set")
+    ap.add_argument("--recalib-sample-rate", type=float, default=1.0,
+                    help="fraction of requests whose token streams feed "
+                         "traffic calibration (sticky per request)")
+    ap.add_argument("--recalib-min-token-factor", type=float, default=0.25,
+                    help="data gate: recompress only once every target "
+                         "layer has streamed at least this factor times "
+                         "its feature count in calibration tokens (below "
+                         "1.0 is safe: the mu-regularized solve covers the "
+                         "insufficient-data regime, and the residual-vs-"
+                         "bound gate still has to clear)")
+    ap.add_argument("--recalib-max-residual-excess", type=float, default=2.0,
+                    help="bound gate: ship recompressed factors only if "
+                         "every layer's achieved residual is within this "
+                         "factor of the attainable error bound")
+    ap.add_argument("--recalib-check-every", type=int, default=2,
+                    help="poll the recalibration gates every N engine steps")
+    ap.add_argument("--recalib-async", choices=("on", "off"), default="off",
+                    help="run the recompression solve on a background "
+                         "thread that stages the swap for the next step "
+                         "boundary (off: solve inline between steps, "
+                         "deterministic)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend a common prefix of this many tokens to "
                          "every trace prompt (prefix-cache-heavy traffic)")

@@ -403,6 +403,22 @@ class LM:
         h, _, _ = self._backbone(params, x, ctx=ctx, capture=calibrator)
         return h
 
+    def capture_prefill(self, params, tokens, calibrator, *,
+                        ctx: ParallelCtx = CPU_CTX,
+                        compute_dtype=jnp.float32):
+        """Capture hook on the serving prefill path: one request's token
+        stream ``tokens`` (T,) runs the unrolled-eager forward, streaming
+        every target linear's input activations into ``calibrator``.
+
+        Causality makes this the exact replay of what serving computed:
+        the activation at position p depends only on tokens <= p, so a
+        calibrator that records position range [start, T) here sees the
+        same rows a live prefill/decode over those positions produced
+        (serve/recalibrate.py slices via its ``record`` override)."""
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32).reshape(1, -1)}
+        return self.capture_forward(params, batch, calibrator, ctx=ctx,
+                                    compute_dtype=compute_dtype)
+
     # ---------------- public: serving ---------------------------------------
     def prefill(self, params, tokens, cache, *, ctx: ParallelCtx = CPU_CTX,
                 vision_embeds=None, compute_dtype=jnp.bfloat16):

@@ -21,7 +21,10 @@ stay comparable across runs and PRs.
 Metric names follow Prometheus conventions (``snake_case``, counters end
 in ``_total``, seconds-valued series end in ``_seconds``). The full name
 table lives in docs/observability.md and is frozen by the golden-key
-schema test in tests/test_obs.py.
+schema test in tests/test_obs.py; optional subsystems extend it only on
+engines that enable them (``serve_spec_*`` with ``draft_params``,
+``serve_recalib_*`` after ``attach_recalibrator``), so the base schema
+never drifts.
 
 Writers are the single-threaded serving loop; reads (exposition/snapshot)
 may come from elsewhere and take no locks — a torn read costs one sample

@@ -117,6 +117,32 @@ def check_r_factors(r_factors: Dict[str, object],
     return out
 
 
+def check_augmented_r_factors(r_factors: Dict[str, object],
+                              mus: Dict[str, float],
+                              tokens_seen: Optional[Dict[str, int]] = None,
+                              policy: NumericsPolicy = NumericsPolicy()
+                              ) -> List[LayerHealth]:
+    """Grade the μ-augmented factors R̃ = qr([R; √μ I]) — the matrices a
+    regularized COALA solve actually uses (Prop. 3).
+
+    In the insufficient-data regime the raw R is singular *by construction*
+    (fewer streamed tokens than features), so ``check_r_factors`` would
+    grade every such layer FAIL on conditioning forever. The μ-augmentation
+    is exactly the paper's fix for that regime, and cond(R̃) is the
+    conditioning of the problem being solved — the live recalibration gate
+    (serve/recalibrate.py) grades this instead of refusing every
+    under-streamed window outright. ``mus``: per-path μ actually used by
+    the solve (LayerReport.mu); a path with μ <= 0 is graded raw. The
+    insufficient-data reason still surfaces via ``tokens_seen``."""
+    from repro.core.tsqr import augment_r_with_mu
+    aug = {}
+    for path, r in r_factors.items():
+        mu = float(mus.get(path, 0.0))
+        r = jnp.asarray(r, jnp.float32)
+        aug[path] = augment_r_with_mu(r, mu) if mu > 0.0 else r
+    return check_r_factors(aug, tokens_seen, policy)
+
+
 def check_calibration(cal, policy: NumericsPolicy = NumericsPolicy()
                       ) -> List[LayerHealth]:
     """Health of a finished calibration — single-device ``Calibrator`` or

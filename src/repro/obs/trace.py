@@ -3,8 +3,10 @@
 One process-wide tracer records *complete* events (``ph: "X"``) around the
 serving and calibration hot paths — scheduler admission, batched prefill,
 decode steps, preemption, copy-on-write page copies, checkpoint I/O,
-calibration R-factor accumulation — plus *instant* events (``ph: "i"``)
-for jit compiles and prefix-cache evictions. The output loads directly in
+calibration R-factor accumulation, live-traffic recalibration
+(``serve.recalib_capture/solve/check/swap``) — plus *instant* events
+(``ph: "i"``) for jit compiles, prefix-cache evictions and rejected
+recalibration solves. The output loads directly in
 ``chrome://tracing`` / https://ui.perfetto.dev.
 
 Design constraints (docs/observability.md has the span taxonomy):

@@ -1,3 +1,5 @@
 from repro.serve.engine import ContinuousEngine, ServeEngine  # noqa: F401
 from repro.serve.paged_cache import BlockPool, CacheLayout  # noqa: F401
+from repro.serve.recalibrate import (  # noqa: F401
+    RecalibPolicy, RecalibWorker, TrafficCalibrator)
 from repro.serve.scheduler import Request, Scheduler  # noqa: F401

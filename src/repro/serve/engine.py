@@ -302,6 +302,7 @@ class ContinuousEngine:
         self.finished: List[Request] = []
         self._next_id = 0
         self._start_time: Optional[float] = None
+        self._recalib = None            # attach_recalibrator() installs one
         self._decode_shapes: set = set()
         self._prefill_shapes: set = set()
         self._spec_shapes: set = set()          # draft-scan + verify rounds
@@ -501,6 +502,10 @@ class ContinuousEngine:
         """Admit + prefill joiners (same-length-bucket suffixes batched into
         one jitted call), run one decode step over the running batch; returns
         the requests that finished during this step."""
+        if self._recalib is not None:
+            # between-steps hook: applies staged hot-swaps first, so a swap
+            # always lands on a step boundary, never mid-dispatch
+            self._recalib.on_step(self)
         done: List[Request] = []
         admitted = self.scheduler.admit()
         groups: Dict[int, list] = {}
@@ -520,6 +525,10 @@ class ContinuousEngine:
                 assert dcached == cached, "draft pool diverged from target"
             self._c_prompt_tokens.inc(len(toks))
             self._c_prefix_hit_tokens.inc(cached)
+            if self._recalib is not None:
+                # capture rides the admission path: the recalibrator replays
+                # exactly the tokens this prefill is about to compute over
+                self._recalib.on_prefill(self, req)
             groups.setdefault(
                 self._bucket_prefill(len(toks) - cached),
                 []).append((req, toks, cached))
@@ -576,6 +585,70 @@ class ContinuousEngine:
             self.draft_pool.fork(parent.req_id, child.req_id)
         self.scheduler.adopt(child)
         return child.req_id
+
+    # ------------------------------------------------------- recalibration
+    def attach_recalibrator(self, worker) -> None:
+        """Install a live-traffic recalibrator (serve/recalibrate.py's
+        ``RecalibWorker``): every ``step()`` calls its ``on_step`` (which
+        applies staged hot-swaps and polls the bound gates), admission
+        routes sampled prefill streams into its calibrator, and the
+        ``serve_recalib_*`` series join the registry. Registered only when
+        attached — the base registry schema (docs/observability.md,
+        tests/test_obs.py) is frozen, same contract as the spec-only
+        series."""
+        self._recalib = worker
+        reg = self.registry
+        worker.bind_metrics(
+            swaps=reg.counter("serve_recalib_swaps_total",
+                              "factor hot-swaps applied to the live engine"),
+            sampled=reg.counter("serve_recalib_sampled_requests_total",
+                                "requests sampled into traffic calibration"),
+            tokens=reg.counter("serve_recalib_captured_tokens_total",
+                               "served token positions streamed into "
+                               "calibration"))
+        reg.gauge("serve_recalib_tokens_seen_min",
+                  "min calibration tokens streamed over target layers",
+                  fn=worker.min_tokens_seen)
+        reg.gauge("serve_recalib_bound_clearance",
+                  "min tokens_seen / (min_token_factor x n) over target "
+                  "layers; the data gate clears at >= 1",
+                  fn=worker.clearance)
+        reg.gauge("serve_recalib_residual_excess",
+                  "worst residual/bound ratio of the last recompression",
+                  fn=lambda: worker.last_excess)
+
+    def hot_swap(self, params, draft_params=None) -> None:
+        """Swap refreshed factors into the live engine between steps — no
+        drain, no retrace. The new pytree must match the live one exactly
+        (treedef + per-leaf shape/dtype): params are traced jit *arguments*
+        (only caches are donated), so a value-only swap hits every existing
+        jit cache entry and ``post_warmup_compiles`` stays 0. In-flight
+        requests keep their KV pages; their next decode step simply runs
+        the new weights."""
+        def _check(name, old, new):
+            to, tn = jax.tree.structure(old), jax.tree.structure(new)
+            if to != tn:
+                raise ValueError(f"hot_swap: {name} treedef mismatch "
+                                 f"(rank-unstable recompression?)")
+            for lo, ln in zip(jax.tree.leaves(old), jax.tree.leaves(new)):
+                so, sn = jnp.shape(lo), jnp.shape(ln)
+                do = jnp.result_type(lo)
+                dn = jnp.result_type(ln)
+                if so != sn or do != dn:
+                    raise ValueError(
+                        f"hot_swap: {name} leaf changed {so}/{do} -> "
+                        f"{sn}/{dn}; swaps must be shape/dtype-stable")
+        if draft_params is not None and not self._spec:
+            raise ValueError("hot_swap: draft_params given but the engine "
+                             "is not in speculative mode")
+        _check("params", self.params, params)
+        if draft_params is not None:
+            _check("draft_params", self.draft_params, draft_params)
+        with trace.span("serve.recalib_swap",
+                        draft=draft_params is not None):
+            self.params = params
+            if draft_params is not None:
+                self.draft_params = draft_params
 
     def stream(self) -> Iterator[Request]:
         """Drive steps until the queue drains, yielding finished requests.
@@ -949,6 +1022,16 @@ class ContinuousEngine:
                 "spec_accept_rate": (self._c_spec_accepted.value / proposed
                                      if proposed > 0 else 0.0),
             })
+        if self._recalib is not None:
+            # recalibration-only keys, same frozen-schema contract as spec
+            w = self._recalib
+            decode.update({
+                "recalib_swaps": int(w.swaps),
+                "recalib_sampled_requests": int(w.cal.sampled_requests),
+                "recalib_captured_tokens": int(w.cal.captured_tokens),
+                "recalib_clearance": float(w.clearance()),
+                "recalib_residual_excess": float(w.last_excess),
+            })
         if not fin:
             return {"requests": 0, "requests_per_sec": 0.0, "new_tokens": 0,
                     "tokens_per_sec": 0.0, "mean_ttft_s": float("nan"),
@@ -988,6 +1071,10 @@ class ContinuousEngine:
         self.finished.append(req)
         self._c_finished.inc()
         self._c_new_tokens.inc(len(req.out_tokens))
+        if self._recalib is not None:
+            # completion capture: the generated inputs (out_tokens[:-1])
+            # stream into calibration once the request's tail is known
+            self._recalib.on_finish(self, req)
 
     def _bucket_batch(self, n: int) -> int:
         for b in self.bucket_sizes:

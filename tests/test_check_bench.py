@@ -37,6 +37,12 @@ def _artifact():
         ("serve/spec_decode_speedup", "1.140"),
         ("serve/spec_greedy_parity", "1.0"),
         ("serve/spec_post_warmup_compiles", 0),
+        ("serve/recalib_greedy_parity", "1.0"),
+        ("serve/recalib_swaps", 1),
+        ("serve/recalib_post_warmup_compiles", 0),
+        ("serve/recalib_swap_ms", "45.2"),
+        ("serve/recalib_tokens_to_clearance", 81),
+        ("serve/recalib_r_gram_rel_err", "5.4e-07"),
         ("dist/calib_sharded8_tok_per_s", "5400.0"),
         ("dist/r_gram_rel_err", "3.1e-07"),
     ]
@@ -98,6 +104,10 @@ def test_band_override_tightens(gate):
     ("serve/spec_greedy_parity", "0.0", "hard invariant"),
     ("serve/spec_accept_rate", "0.0", "hard invariant"),
     ("serve/spec_post_warmup_compiles", 2, "hard invariant"),
+    ("serve/recalib_swaps", 0, "hard invariant"),
+    ("serve/recalib_post_warmup_compiles", 1, "hard invariant"),
+    ("serve/recalib_greedy_parity", "0.0", "hard invariant"),
+    ("serve/recalib_r_gram_rel_err", "1e-2", "hard invariant"),
     ("dist/r_gram_rel_err", "2e-3", "hard invariant"),
 ])
 def test_hard_invariant_violations_fail(gate, name, value, frag):

@@ -84,18 +84,20 @@ def _check_invariants(pool, live_tokens):
 def _run_trace(model, seed, n_ops=60):
     rng = np.random.RandomState(seed)
     pool = _pool(model)
-    live = {}                 # rid -> committed token list
+    live = {}                 # rid -> token list (may have uncommitted tail)
+    clen = {}                 # rid -> committed token count (block-aligned)
     committed = set()         # every block-aligned prefix ever committed
     next_id = 0
 
     def commit(rid):
         toks = np.asarray(live[rid], np.int32)
         pool.commit(rid, toks)
+        clen[rid] = (len(toks) // BS) * BS
         for k in range(1, len(toks) // BS + 1):
             committed.add(tuple(int(t) for t in toks[:k * BS]))
 
     for _ in range(n_ops):
-        op = rng.randint(4)
+        op = rng.randint(5)
         if op == 0:                                    # alloc (prefill)
             toks = rng.randint(0, VOCAB, (rng.randint(1, 9),))
             rid = next_id
@@ -120,9 +122,12 @@ def _run_trace(model, seed, n_ops=60):
             except MemoryError:                        # engine would preempt
                 live[rid].pop()
                 pool.free(rid)
-                del live[rid]
+                del live[rid], clen[rid]
                 continue
-            commit(rid)
+            # skipping commit half the time models a speculative run's
+            # written-but-uncommitted tail (verify writes, then rollback)
+            if rng.randint(2):
+                commit(rid)
         elif op == 2 and live:                         # fork (best-of-n)
             rid = list(live)[rng.randint(len(live))]
             try:
@@ -131,15 +136,29 @@ def _run_trace(model, seed, n_ops=60):
                 _check_invariants(pool, live)
                 continue
             live[next_id] = list(live[rid])
+            clen[next_id] = clen[rid]
             next_id += 1
         elif op == 3 and live:                         # free (finish)
             rid = list(live)[rng.randint(len(live))]
             pool.free(rid)
-            del live[rid]
+            del live[rid], clen[rid]
+        elif op == 4 and live:                         # truncate (spec
+            rid = list(live)[rng.randint(len(live))]   # rollback)
+            # engine contract: only the uncommitted tail is ever rolled
+            # back (spec rejection truncates to the accepted cache_len,
+            # which is >= the last committed block boundary)
+            lo = max(clen[rid], 1)
+            n = int(rng.randint(lo, len(live[rid]) + 1))
+            pool.truncate(rid, n)
+            live[rid] = live[rid][:n]
+            # rolling back past a fork point must decref shared blocks,
+            # never orphan them: conservation + exact refcounts below
+            # catch both a leak and a double-free
+            assert len(pool.table(rid)) == pool.blocks_for(n)
         _check_invariants(pool, live)
     for rid in list(live):
         pool.free(rid)
-        del live[rid]
+        del live[rid], clen[rid]
     _check_invariants(pool, live)
     # with everything freed, every block is free or cached
     assert pool.available_blocks == pool.usable_blocks

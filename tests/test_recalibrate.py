@@ -1,0 +1,320 @@
+"""Live-traffic recalibration: capture parity, bound-gated hot swaps, and
+the no-retrace / no-drain serving invariants.
+
+The contract under test (serve/recalibrate.py + ContinuousEngine.hot_swap):
+
+  * capture parity — the R factors a ``TrafficCalibrator`` accumulates from
+    a served trace equal (as RᵀR) an offline ``Calibrator`` fed the same
+    sampled token streams: incremental position-sliced capture is exactly
+    causal replay;
+  * swap exactness — ``hot_swap`` is a pure value swap: swapping factors
+    bitwise-identical to the live ones must not perturb a single token of
+    any in-flight or future request;
+  * zero retraces — rank-pinned recompression keeps every factor's
+    shape/dtype, so a swap after ``warmup()`` leaves
+    ``post_warmup_compiles() == 0``;
+  * gating — no swap ships before the data gate clears, and rank-unstable
+    or treedef-changing params are rejected loudly.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import CompressConfig
+from repro.configs import get_smoke_config
+from repro.core.calibrate import Calibrator
+from repro.core.compress import compress_model, rank_map_from_reports
+from repro.models import build_model
+from repro.obs import numerics
+from repro.serve import (ContinuousEngine, RecalibPolicy, RecalibWorker,
+                         TrafficCalibrator)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("smollm_135m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    cal = Calibrator()
+    for _ in range(3):
+        batch = {"tokens": jnp.asarray(
+            rng.randint(0, cfg.vocab_size, (2, 32)))}
+        model.capture_forward(params, batch, cal)
+    ccfg = CompressConfig(method="coala", ratio=0.6, lam=4.0, mu=-1.0)
+    cparams, reports = compress_model(model, params, cal, ccfg)
+    return cfg, model, params, ccfg, cparams, rank_map_from_reports(reports)
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("num_blocks", 64)
+    kw.setdefault("max_running", 4)
+    return ContinuousEngine(model, params, compute_dtype=jnp.float32,
+                           cache_dtype=jnp.float32, **kw)
+
+
+def _trace(cfg, n=4, seed=1):
+    rng = np.random.RandomState(seed)
+    return [(2 * i, rng.randint(0, cfg.vocab_size, (6 + 5 * i,)), 10)
+            for i in range(n)]
+
+
+def _serve(eng, trace):
+    pending = list(trace)
+    step = 0
+    while pending or eng.has_work():
+        while pending and pending[0][0] <= step:
+            _, prompt, nn = pending.pop(0)
+            eng.submit(prompt, nn)
+        eng.step()
+        step += 1
+    eng.flush_stream()
+    return {r.req_id: list(r.out_tokens) for r in eng.finished}
+
+
+def _attach(eng, model, params, ccfg, rank_map, **pol):
+    pol.setdefault("check_every", 1)
+    pol.setdefault("min_new_tokens", 8)
+    cal = TrafficCalibrator(model, policy=RecalibPolicy(**pol))
+    worker = RecalibWorker(model, params, cal, ccfg, rank_map=rank_map)
+    eng.attach_recalibrator(worker)
+    return worker
+
+
+# ------------------------------------------------------------------ parity
+def test_traffic_r_matches_offline_replay(setup):
+    """The tentpole parity claim: traffic-captured R == offline Calibrator
+    fed the same sampled streams, as RᵀR, to fp32 roundoff. Causality makes
+    the incremental (prompt-at-admission + tail-at-completion) capture an
+    exact replay of full-stream capture."""
+    cfg, model, params, ccfg, cparams, rank_map = setup
+    eng = _engine(model, cparams)
+    worker = _attach(eng, model, params, ccfg, rank_map,
+                     min_token_factor=1e9)      # collect only, never swap
+    _serve(eng, _trace(cfg))
+    cal = worker.cal
+    assert cal.sampled_requests == 4 and cal.captured_streams
+    offline = Calibrator()
+    for stream in cal.captured_streams:
+        model.capture_forward(params, {"tokens": jnp.asarray(stream)[None]},
+                              offline)
+    rf_t, rf_o = cal.r_factors(), offline.r_factors()
+    assert set(rf_t) == set(rf_o)
+    assert cal.tokens_seen() == offline.tokens_seen()
+    for p in rf_o:
+        g_t, g_o = rf_t[p].T @ rf_t[p], rf_o[p].T @ rf_o[p]
+        rel = float(jnp.linalg.norm(g_t - g_o) / jnp.linalg.norm(g_o))
+        assert rel < 1e-4, (p, rel)
+
+
+def test_incremental_capture_counts_positions_once(setup):
+    """Re-admission after preemption must resume from captured_upto: a
+    second on_prefill over a longer stream adds only the new positions."""
+    cfg, model, params, ccfg, cparams, rank_map = setup
+    cal = TrafficCalibrator(model, policy=RecalibPolicy())
+
+    class Req:
+        req_id = 7
+        prompt = np.arange(6, dtype=np.int32) % cfg.vocab_size
+        out_tokens = []
+
+        def prefill_tokens(self):
+            return np.concatenate(
+                [self.prompt, np.asarray(self.out_tokens, np.int32)])
+
+    req = Req()
+    cal.on_prefill(params, req)
+    assert cal.captured_tokens == 6
+    req.out_tokens = [1, 2, 3]           # preempted after 3 tokens, resumed
+    cal.on_prefill(params, req)
+    assert cal.captured_tokens == 9      # only the 3 new positions
+    req.out_tokens = [1, 2, 3, 4, 5]
+    cal.on_finish(params, req)           # tail: out[:-1] past captured_upto
+    assert cal.captured_tokens == 10
+    assert set(cal.tokens_seen().values()) == {10}
+    (stream,) = cal.captured_streams
+    np.testing.assert_array_equal(
+        stream, np.concatenate([req.prompt, [1, 2, 3, 4]]))
+
+
+# ------------------------------------------------------- swap exactness
+def test_identity_hot_swap_is_token_exact(setup):
+    """Swapping in bitwise-identical factors mid-trace must not change any
+    token of any request — in-flight requests keep their KV pages and the
+    output stream equals a never-swapped engine's exactly."""
+    cfg, model, params, ccfg, cparams, rank_map = setup
+    ref = _serve(_engine(model, cparams), _trace(cfg))
+
+    eng = _engine(model, cparams)
+    swaps = 0
+    pending = list(_trace(cfg))
+    step = 0
+    while pending or eng.has_work():
+        while pending and pending[0][0] <= step:
+            _, prompt, nn = pending.pop(0)
+            eng.submit(prompt, nn)
+        eng.step()
+        if eng.scheduler.running:        # swap while requests are in flight
+            eng.hot_swap(jax.tree.map(jnp.copy, eng.params))
+            swaps += 1
+        step += 1
+    eng.flush_stream()
+    assert swaps > 0
+    got = {r.req_id: list(r.out_tokens) for r in eng.finished}
+    assert got == ref
+
+
+def test_real_swap_mid_trace_no_retrace(setup):
+    """A genuine bound-cleared recompression swap lands while requests are
+    in flight, every request still runs to completion, and the swap causes
+    zero post-warmup compiles (rank-stable shapes hit the live jit cache)."""
+    cfg, model, params, ccfg, cparams, rank_map = setup
+    eng = _engine(model, cparams)
+    trace = _trace(cfg)
+    eng.warmup(max_len=max(len(p) + nn for _, p, nn in trace))
+    worker = _attach(eng, model, params, ccfg, rank_map)
+    in_flight_at_swap = -1
+    pending = list(trace)
+    step = 0
+    while pending or eng.has_work():
+        while pending and pending[0][0] <= step:
+            _, prompt, nn = pending.pop(0)
+            eng.submit(prompt, nn)
+        eng.step()
+        if worker.swaps and in_flight_at_swap < 0:
+            in_flight_at_swap = len(eng.scheduler.running)
+        step += 1
+    eng.flush_stream()
+    assert worker.swaps >= 1, worker.summary()
+    assert in_flight_at_swap > 0, "swap landed with no requests in flight"
+    assert worker.last_excess <= worker.policy.max_residual_excess
+    assert eng.post_warmup_compiles() == 0
+    assert len(eng.finished) == len(trace)
+    assert all(len(r.out_tokens) == r.max_new_tokens for r in eng.finished)
+
+
+def test_hot_swap_rejects_shape_and_treedef_changes(setup):
+    """Rank-unstable factors (different shapes) or a different pytree
+    structure must be rejected before touching the live params."""
+    cfg, model, params, ccfg, cparams, rank_map = setup
+    eng = _engine(model, cparams)
+    live = eng.params
+    # shape change: truncate one rank dimension of one factored leaf
+    bad = jax.tree.map(
+        lambda a: a[..., :-1] if a.ndim == 3 and a.shape[-1] > 1 else a,
+        cparams)
+    with pytest.raises(ValueError, match="shape/dtype"):
+        eng.hot_swap(bad)
+    # treedef change: dense params have {'w'} where factored have
+    # {'a_t','b_t'}
+    with pytest.raises(ValueError, match="treedef"):
+        eng.hot_swap(params)
+    # draft swap without speculative mode
+    with pytest.raises(ValueError, match="speculative"):
+        eng.hot_swap(cparams, cparams)
+    assert eng.params is live
+
+
+# ----------------------------------------------------------------- gating
+def test_no_swap_before_data_gate_clears(setup):
+    """With an unreachable min_token_factor the worker keeps collecting:
+    no solve is attempted and the served output equals a plain engine's."""
+    cfg, model, params, ccfg, cparams, rank_map = setup
+    ref = _serve(_engine(model, cparams), _trace(cfg))
+    eng = _engine(model, cparams)
+    worker = _attach(eng, model, params, ccfg, rank_map,
+                     min_token_factor=1e9)
+    got = _serve(eng, _trace(cfg))
+    assert worker.swaps == 0 and worker.solve_attempts == 0
+    assert worker.last_status == "collecting"
+    assert 0.0 <= worker.clearance() < 1.0
+    assert got == ref
+
+
+def test_sampling_rate_zero_captures_nothing(setup):
+    cfg, model, params, ccfg, cparams, rank_map = setup
+    eng = _engine(model, cparams)
+    worker = _attach(eng, model, params, ccfg, rank_map, sample_rate=0.0)
+    _serve(eng, _trace(cfg))
+    assert worker.cal.sampled_requests == 0
+    assert worker.cal.captured_tokens == 0
+    assert worker.swaps == 0 and worker.clearance() == 0.0
+
+
+def test_augmented_cond_gate_uses_mu(setup):
+    """The conditioning gate grades the μ-augmented R̃ (Prop. 3), not the
+    raw R: with fewer streamed tokens than features the raw R is singular
+    by construction (cond = inf, permanent FAIL) while R̃ is well-posed."""
+    rng = np.random.RandomState(0)
+    n, t = 16, 7                          # t < n: insufficient-data regime
+    cal = Calibrator()
+    cal.record("layer", jnp.asarray(rng.randn(t, n), jnp.float32))
+    rf = cal.r_factors()
+    raw = numerics.check_r_factors(rf)
+    assert raw[0].cond == float("inf") and raw[0].level == numerics.FAIL
+    aug = numerics.check_augmented_r_factors(rf, {"layer": 1e-2})
+    assert np.isfinite(aug[0].cond)
+    assert aug[0].level != numerics.FAIL
+    # μ <= 0 falls back to grading the raw factor
+    aug0 = numerics.check_augmented_r_factors(rf, {"layer": 0.0})
+    assert aug0[0].cond == float("inf")
+
+
+# ---------------------------------------------------------------- metrics
+def test_recalib_metrics_only_when_attached(setup):
+    """metrics()/registry schema is frozen for plain engines; the
+    serve_recalib_* series appear only after attach_recalibrator."""
+    cfg, model, params, ccfg, cparams, rank_map = setup
+    plain = _engine(model, cparams)
+    assert not any("recalib" in k for k in plain.metrics())
+    assert not any("recalib" in n for n in plain.registry.snapshot())
+
+    eng = _engine(model, cparams)
+    worker = _attach(eng, model, params, ccfg, rank_map)
+    _serve(eng, _trace(cfg))
+    m = eng.metrics()
+    assert m["recalib_swaps"] == worker.swaps >= 1
+    assert m["recalib_sampled_requests"] == 4
+    assert m["recalib_captured_tokens"] == worker.cal.captured_tokens > 0
+    assert m["recalib_clearance"] >= 1.0
+    assert np.isfinite(m["recalib_residual_excess"])
+    snap = eng.registry.snapshot()
+    assert snap["serve_recalib_swaps_total"] == worker.swaps
+    assert snap["serve_recalib_captured_tokens_total"] == \
+        worker.cal.captured_tokens
+    assert snap["serve_recalib_sampled_requests_total"] == 4
+    assert snap["serve_recalib_tokens_seen_min"] == worker.min_tokens_seen()
+    assert snap["serve_recalib_bound_clearance"] == pytest.approx(
+        worker.clearance())
+
+
+def test_worker_rejects_empty_rank_map(setup):
+    cfg, model, params, ccfg, cparams, rank_map = setup
+    cal = TrafficCalibrator(model, policy=RecalibPolicy())
+    with pytest.raises(ValueError, match="rank_map"):
+        RecalibWorker(model, params, cal, ccfg, rank_map={})
+    with pytest.raises(ValueError, match="draft_rank_map"):
+        RecalibWorker(model, params, cal, ccfg, rank_map=rank_map,
+                      draft_ratio=0.4)
+
+
+def test_rank_map_recompression_is_shape_stable(setup):
+    """compress_model with a pinned rank_map reproduces the exact factor
+    shapes/dtypes of the original compression from different calibration
+    data — the invariant hot swaps depend on."""
+    cfg, model, params, ccfg, cparams, rank_map = setup
+    rng = np.random.RandomState(9)
+    cal2 = Calibrator()
+    model.capture_forward(
+        params, {"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size,
+                                                   (1, 40)))}, cal2)
+    re_params, re_reports = compress_model(model, params, cal2, ccfg,
+                                           rank_map=rank_map)
+    assert jax.tree.structure(re_params) == jax.tree.structure(cparams)
+    for a, b in zip(jax.tree.leaves(re_params), jax.tree.leaves(cparams)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    assert {r.path: r.rank for r in re_reports
+            if r.path in rank_map} == rank_map

@@ -1,0 +1,184 @@
+"""Seeded chaos soak of the serving engine: preemption, fork, speculative
+rollback, prefix eviction, and mid-trace hot-swaps, all interleaved.
+
+Each trace drives a ``ContinuousEngine`` with randomized staggered arrivals
+against a deliberately small paged pool (preemption + prefix-eviction churn),
+randomly forks running requests (COW sharing), optionally serves
+speculatively (draft+verify rollback via ``BlockPool.truncate``), and
+hot-swaps bitwise-identical params mid-trace (the value-swap no-op). After
+EVERY step the paged pool must satisfy the allocator conservation
+invariants, and at the end every greedy request must match the fixed-batch
+``ServeEngine`` oracle token-for-token — forked children included (greedy
+children continue the parent's trajectory).
+
+A short variant keeps the soak in tier-1; the full sweep (more seeds, more
+requests, speculative lane) runs under ``-m slow``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import CompressConfig
+from repro.configs import get_smoke_config
+from repro.core.calibrate import calibrate_model
+from repro.core.compress import compress_model
+from repro.models import build_model
+from repro.serve import ContinuousEngine, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = get_smoke_config("smollm_135m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def draft_params(smollm):
+    cfg, model, params = smollm
+    rng = np.random.RandomState(3)
+    cal = calibrate_model(
+        model, params,
+        [{"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (2, 24)))}
+         for _ in range(2)])
+    dparams, _ = compress_model(
+        model, params, cal, CompressConfig(method="coala", ratio=0.5,
+                                           lam=4.0, mu=-1.0))
+    return dparams
+
+
+def _pool_invariants(pool, live_ids):
+    """Allocator conservation after any step: free/cached/live partition the
+    pool exactly, refcounts equal table membership, nothing leaks."""
+    free = set(pool.free_block_ids())
+    cached = set(pool.cached_block_ids())
+    live, refs = set(), {}
+    for rid in live_ids:
+        for b in pool.table(rid):
+            refs[b] = refs.get(b, 0) + 1
+            live.add(b)
+    assert 0 not in free | cached | live
+    assert not (free & cached or free & live or cached & live)
+    assert len(free) + len(cached) + len(live) == pool.usable_blocks, \
+        (sorted(free), sorted(cached), sorted(live))
+    for b in live:
+        assert pool.ref_count(b) == refs[b], (b, pool.ref_count(b), refs[b])
+    for b in free | cached:
+        assert pool.ref_count(b) == 0
+
+
+def _soak(cfg, model, params, *, seed, n_requests, dparams=None,
+          swap=True, num_blocks=14, block_size=2, max_running=3,
+          max_prompt=8, max_new=7):
+    rng = np.random.RandomState(seed)
+    eng = ContinuousEngine(model, params, compute_dtype=jnp.float32,
+                           cache_dtype=jnp.float32, block_size=block_size,
+                           num_blocks=num_blocks, max_running=max_running,
+                           draft_params=dparams, spec_k=2)
+    trace = []
+    arrive = 0
+    for _ in range(n_requests):
+        prompt = rng.randint(0, cfg.vocab_size,
+                             (rng.randint(2, max_prompt + 1),))
+        trace.append((arrive, prompt.astype(np.int32),
+                      int(rng.randint(2, max_new + 1))))
+        arrive += int(rng.randint(0, 4))
+    pending = list(trace)
+    expected = {}                     # rid -> (prompt, n_expected_tokens)
+    parents = {}                      # forked child rid -> parent rid
+    swaps = forks = 0
+    step = 0
+    while pending or eng.has_work():
+        while pending and pending[0][0] <= step:
+            _, prompt, nn = pending.pop(0)
+            rid = eng.submit(prompt, nn)
+            expected[rid] = (prompt, nn)
+        eng.step()
+        live_ids = [r.req_id for r in eng.scheduler.running]
+        _pool_invariants(eng.pool, live_ids)
+        if eng.draft_pool is not None:
+            _pool_invariants(eng.draft_pool, live_ids)
+        running = list(eng.scheduler.running)
+        if (running and rng.randint(4) == 0
+                and len(running) < max_running):
+            parent = running[rng.randint(len(running))]
+            try:
+                child = eng.fork(parent.req_id)
+            except (ValueError, MemoryError):
+                pass                  # slot/pool full: engine said no cleanly
+            else:
+                forks += 1
+                root = parents.get(parent.req_id, parent.req_id)
+                parents[child] = root
+                expected[child] = expected[root]
+            _pool_invariants(eng.pool,
+                             [r.req_id for r in eng.scheduler.running])
+        if swap and running and rng.randint(3) == 0:
+            eng.hot_swap(
+                jax.tree.map(jnp.copy, eng.params),
+                jax.tree.map(jnp.copy, eng.draft_params)
+                if dparams is not None else None)
+            swaps += 1
+        step += 1
+        assert step < 2000, "soak failed to drain"
+    eng.flush_stream()
+    _pool_invariants(eng.pool, [])
+    assert eng.pool.available_blocks == eng.pool.usable_blocks
+    assert len(eng.finished) == len(expected)
+
+    # greedy parity: every request (and every forked child — greedy forks
+    # continue the parent's trajectory) matches the fixed-batch oracle
+    oracle = ServeEngine(model, params, compute_dtype=jnp.float32,
+                         cache_dtype=jnp.float32)
+    fin = {r.req_id: r for r in eng.finished}
+    checked = 0
+    for rid, (prompt, nn) in expected.items():
+        got = np.asarray(fin[rid].out_tokens)
+        ref = np.asarray(oracle.generate(
+            jnp.asarray(prompt)[None], max_new_tokens=nn))[0, len(prompt):]
+        np.testing.assert_array_equal(
+            ref[:len(got)], got,
+            err_msg=f"request {rid} (seed {seed}) diverged from oracle")
+        assert len(got) == nn, (rid, len(got), nn)
+        checked += 1
+    stats = dict(swaps=swaps, forks=forks, checked=checked,
+                 preemptions=sum(r.preemptions for r in fin.values()),
+                 evictions=int(eng.registry.get(
+                     "pool_prefix_evictions_total").value))
+    return stats
+
+
+def test_soak_fast(smollm):
+    """Tier-1 variant: one seed, small trace, swaps + forks + preemption
+    pressure, invariants every step, full greedy parity."""
+    cfg, model, params = smollm
+    stats = _soak(cfg, model, params, seed=0, n_requests=6)
+    assert stats["swaps"] > 0
+    assert stats["checked"] >= 6
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(4))
+def test_soak_sweep(smollm, seed):
+    """Full sweep: longer traces under a tighter pool (guaranteed eviction
+    and preemption churn), per-seed randomized fork/swap interleavings."""
+    cfg, model, params = smollm
+    stats = _soak(cfg, model, params, seed=seed, n_requests=10,
+                  num_blocks=12, max_new=8)
+    assert stats["swaps"] > 0
+    assert stats["checked"] >= 10
+
+
+@pytest.mark.slow
+def test_soak_speculative(smollm, draft_params):
+    """Speculative lane: draft+verify rounds roll rejected pages back via
+    truncate every step, while forks, identity hot-swaps of BOTH param
+    sets, and preemption run interleaved; both pools hold conservation,
+    greedy stays token-exact vs the non-speculative oracle."""
+    cfg, model, params = smollm
+    stats = _soak(cfg, model, params, seed=1, n_requests=8,
+                  dparams=draft_params, num_blocks=16)
+    assert stats["swaps"] > 0
+    assert stats["checked"] >= 8

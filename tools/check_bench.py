@@ -21,9 +21,13 @@ Checks, per artifact:
      5``, ``serve/paged_vs_gather_decode_speedup >= 1``, the speculative
      rows (``serve/spec_greedy_parity == 1``, ``serve/spec_accept_rate >
      0``, ``serve/spec_decode_speedup >= 1``,
-     ``serve/spec_post_warmup_compiles == 0``) and
-     ``dist/r_gram_rel_err < 1e-3`` (each required whenever the artifact
-     ran that suite).
+     ``serve/spec_post_warmup_compiles == 0``), the live-recalibration
+     rows (``serve/recalib_swaps >= 1`` — at least one bound-cleared
+     hot-swap, ``serve/recalib_post_warmup_compiles == 0`` — swaps never
+     retrace, ``serve/recalib_greedy_parity == 1`` — identity swaps are
+     token-exact, ``serve/recalib_r_gram_rel_err < 1e-3`` — traffic
+     calibration matches offline replay) and ``dist/r_gram_rel_err <
+     1e-3`` (each required whenever the artifact ran that suite).
   4. **Baseline comparisons** — each baseline row carries a ``kind``:
        * ``band``: value within ±``band_pct``% of the baseline value
          (default 40 — CPU CI wall times are noisy; per-row ``band_pct``
@@ -67,6 +71,10 @@ HARD_INVARIANTS = {
         ("serve/spec_accept_rate", ">", 0.0),
         ("serve/spec_decode_speedup", ">=", 1.0),
         ("serve/spec_post_warmup_compiles", "==", 0.0),
+        ("serve/recalib_swaps", ">=", 1.0),
+        ("serve/recalib_post_warmup_compiles", "==", 0.0),
+        ("serve/recalib_greedy_parity", "==", 1.0),
+        ("serve/recalib_r_gram_rel_err", "<", 1e-3),
     ],
     "dist": [
         ("dist/r_gram_rel_err", "<", 1e-3),
