@@ -506,37 +506,74 @@ def bench_serving():
     _row("serve/offline_tok_per_s", f"{mo['tokens_per_sec']:.2f}",
          "run_offline on the warmed engine: length-sorted, packed prefills")
 
-    # observability overhead: the same paged-path trace with span tracing
-    # enabled vs disabled (the metrics registry is always on — counters are
-    # plain attribute adds — so the delta is the tracing hot-path cost).
-    # Both sides are steady-state best-of-repeats, like every serve row.
+    # observability overhead: the same paged-path trace with the FULL
+    # telemetry plane on — span tracing, the live HTTP telemetry server
+    # (bound on an ephemeral port, scraped once mid-measurement), a flight
+    # recorder, and SLO accounting — vs everything off (the metrics
+    # registry is always on; counters are plain attribute adds). Both
+    # sides are steady-state best-of-repeats, like every serve row.
+    import urllib.request
+
+    from repro.obs import FlightRecorder, TelemetryServer
     from repro.obs import trace as obs_trace
 
-    def run_obs(tracing_on):
-        obs_trace.disable()
-        if tracing_on:
-            obs_trace.enable()
-        try:
-            eng = ContinuousEngine(model, params, compute_dtype=jnp.float32,
-                                   cache_dtype=jnp.float32, block_size=8,
-                                   num_blocks=num_blocks, max_running=4,
-                                   paged_kernel=True)
-            m = steady_state(eng, trace, "decode_tok_per_s",
-                             lambda a, b: a > b)
-        finally:
-            obs_trace.disable()
-        return m, eng
+    def mk_obs_engine(full_plane):
+        flight = FlightRecorder(capacity=4096) if full_plane else None
+        return ContinuousEngine(model, params, compute_dtype=jnp.float32,
+                                cache_dtype=jnp.float32, block_size=8,
+                                num_blocks=num_blocks, max_running=4,
+                                paged_kernel=True,
+                                slo_ttft_s=60.0 if full_plane else None,
+                                slo_tpot_s=60.0 if full_plane else None,
+                                flight_recorder=flight)
 
-    m_off, _ = run_obs(False)
-    m_on, eng_on = run_obs(True)
-    off = m_off["decode_tok_per_s"]
-    on = m_on["decode_tok_per_s"]
+    # the two arms run INTERLEAVED and the overhead is the MEDIAN of the
+    # per-round on/off ratios: a sequential A/B on a shared CPU measures
+    # machine drift, not plane cost, and best-of-N still hands the win to
+    # whichever arm drew the luckiest scheduling window (single-pass
+    # deltas swing past the 5% bar in either direction)
+    eng_off = mk_obs_engine(False)
+    eng_on = mk_obs_engine(True)
+    server = TelemetryServer(port=0)
+    server.attach(eng_on)
+    off = on = 0.0
+    m_on = None
+    ratios = []
+    try:
+        obs_trace.disable()
+        serve_trace(eng_off, trace)                    # warm both jit sets
+        obs_trace.enable()
+        serve_trace(eng_on, trace)
+        for _ in range(5 if SMOKE else 7):
+            obs_trace.disable()
+            eng_off.reset_metrics()
+            r_off = serve_trace(eng_off, trace)["decode_tok_per_s"]
+            off = max(off, r_off)
+            obs_trace.enable()
+            eng_on.reset_metrics()
+            cur = serve_trace(eng_on, trace)
+            if cur["decode_tok_per_s"] > on:
+                on, m_on = cur["decode_tok_per_s"], cur
+            ratios.append(cur["decode_tok_per_s"] / max(r_off, 1e-9))
+        # prove the plane is actually live while we measure it
+        with urllib.request.urlopen(server.url("/healthz"),
+                                    timeout=10) as r:
+            assert r.getcode() == 200, "/healthz not ready"
+    finally:
+        obs_trace.disable()
+        server.close()
+    assert len(eng_on.flight) > 0, "flight recorder saw no events"
+    overhead_pct = (1.0 - float(np.median(ratios))) * 100.0
     _row("serve/obs_off_decode_tok_per_s", f"{off:.2f}",
-         "tracing disabled (no-op singleton)")
+         "telemetry plane fully off (no-op tracer singleton)")
     _row("serve/obs_on_decode_tok_per_s", f"{on:.2f}",
-         "tracing + metrics enabled")
-    _row("serve/obs_overhead_pct", f"{(off - on) / max(off, 1e-9) * 100:.2f}",
-         "acceptance: < 5 (steady-state decode tok/s, best of repeats)")
+         "tracing + metrics + HTTP server + flight recorder + SLOs")
+    _row("serve/obs_overhead_pct", f"{overhead_pct:.2f}",
+         "acceptance: < 5 with the full telemetry plane enabled "
+         "(median of per-round interleaved on/off throughput ratios)")
+    _row("serve/slo_goodput", f"{m_on['slo_goodput']:.3f}",
+         "fraction of finished requests inside generous 60s SLOs; "
+         "acceptance: == 1.0 on uncontended smoke traffic")
     # latency-distribution rows straight from the registry snapshot — the
     # golden-key schema test (tests/test_obs.py) freezes these names
     snap = eng_on.registry.snapshot()
@@ -544,7 +581,10 @@ def bench_serving():
                 "serve_queue_wait_seconds_p50",
                 "serve_queue_wait_seconds_p99",
                 "serve_decode_step_seconds_p50",
-                "serve_decode_step_seconds_p99"):
+                "serve_decode_step_seconds_p99",
+                "serve_tpot_seconds_p50", "serve_tpot_seconds_p99",
+                "serve_request_e2e_seconds_p50",
+                "serve_request_e2e_seconds_p99"):
         _row(f"serve/{key}", f"{snap[key]:.5f}", "registry snapshot")
 
     # speculative decoding: target + COALA self-draft built from the same

@@ -26,6 +26,7 @@ from repro.core.compress import (compress_model, compress_model_pair,
                                  compression_summary)
 from repro.data import DataConfig, TokenPipeline
 from repro.models import build_model
+from repro.obs import FlightRecorder, TelemetryServer
 from repro.obs import trace as obs_trace
 from repro.serve import ContinuousEngine, ServeEngine
 
@@ -95,6 +96,30 @@ def run_continuous(args, cfg, model, params, pipe):
     if args.requests <= 0:
         print("no requests to serve")
         return None
+    # live telemetry plane (docs/observability.md): the HTTP server comes
+    # up before compression/warmup so scrapes work for the whole run; one
+    # server spans both engines via attach(), and one flight recorder
+    # accumulates lifecycle events across them
+    server = None
+    if args.telemetry_port >= 0:
+        server = TelemetryServer(port=args.telemetry_port)
+        print(f"telemetry: listening on http://{server.host}:{server.port} "
+              "(/metrics /healthz /requests /snapshot)")
+    flight = (FlightRecorder(capacity=args.flight_recorder)
+              if args.flight_recorder > 0 else None)
+    slo_ttft = args.slo_ttft_ms / 1e3 if args.slo_ttft_ms > 0 else None
+    slo_tpot = args.slo_tpot_ms / 1e3 if args.slo_tpot_ms > 0 else None
+    try:
+        return _run_continuous(args, cfg, model, params, pipe,
+                               server=server, flight=flight,
+                               slo_ttft=slo_ttft, slo_tpot=slo_tpot)
+    finally:
+        if server is not None:
+            server.close()
+
+
+def _run_continuous(args, cfg, model, params, pipe, *, server, flight,
+                    slo_ttft, slo_tpot):
     ratio = args.compress_ratio if args.compress_ratio > 0 else 0.6
     cparams, dparams, reports, dreports = _compressed_params(
         cfg, model, params, pipe, ratio, draft_ratio=args.draft_ratio)
@@ -121,7 +146,11 @@ def run_continuous(args, cfg, model, params, pipe):
                                prefill_bucket_sizes=_parse_buckets(
                                    args.prefill_bucket_sizes),
                                async_detok=args.detok_async == "on",
-                               draft_params=dparams, spec_k=args.spec_k)
+                               draft_params=dparams, spec_k=args.spec_k,
+                               slo_ttft_s=slo_ttft, slo_tpot_s=slo_tpot,
+                               flight_recorder=flight)
+        if server is not None:
+            server.attach(eng)
         worker = None
         if args.calibrate_from_traffic and name == "coala":
             # stream this engine's own traffic back into calibration and
@@ -176,6 +205,10 @@ def run_continuous(args, cfg, model, params, pipe):
               f"{m['decode_steps']} steps ({m['decode_shapes']} shape buckets)"
               + (f"; {m['post_warmup_compiles']} post-warmup compiles"
                  if args.warmup == "on" else ""))
+        if slo_ttft is not None or slo_tpot is not None:
+            print(f"[{name}] SLO goodput {m['slo_goodput']:.2f} "
+                  f"(ttft <= {slo_ttft if slo_ttft is not None else '-'}s, "
+                  f"tpot <= {slo_tpot if slo_tpot is not None else '-'}s)")
         if "spec_accept_rate" in m:
             print(f"[{name}] speculative (draft ratio {args.draft_ratio}, "
                   f"k={int(m['spec_k'])}): {int(m['spec_rounds'])} rounds, "
@@ -319,11 +352,32 @@ def main():
     ap.add_argument("--metrics-out", default="",
                     help="write the last engine's metrics registry in "
                          "Prometheus text exposition format to this path")
+    ap.add_argument("--trace-max-events", type=int, default=0,
+                    help="cap the tracer's in-memory event list as a ring "
+                         "of the most recent N events, for bounded memory "
+                         "on long runs (0 = unbounded)")
+    ap.add_argument("--telemetry-port", type=int, default=-1,
+                    help="serve live telemetry HTTP endpoints (/metrics, "
+                         "/healthz, /requests, /snapshot) from the running "
+                         "continuous engines on this port (0 picks an "
+                         "ephemeral port; -1 = off)")
+    ap.add_argument("--flight-recorder", type=int, default=0,
+                    help="record per-request lifecycle events into a ring "
+                         "of this capacity and dump a postmortem bundle "
+                         "(POSTMORTEM_serve.json) on engine failure paths "
+                         "(0 = off)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=0.0,
+                    help="time-to-first-token SLO in milliseconds; feeds "
+                         "the serve_slo_goodput gauge (0 = unset)")
+    ap.add_argument("--slo-tpot-ms", type=float, default=0.0,
+                    help="per-output-token latency SLO in milliseconds "
+                         "(mean after the first token); feeds the "
+                         "serve_slo_goodput gauge (0 = unset)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     if args.trace_out:
-        obs_trace.enable()
+        obs_trace.enable(max_events=args.trace_max_events or None)
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))

@@ -1,29 +1,37 @@
-"""Observability: span tracing, typed metrics, numerical-health monitors.
+"""Observability: tracing, metrics, numerics monitors, live telemetry.
 
-Three zero-dependency pillars (see docs/observability.md):
+Five zero-dependency pillars (see docs/observability.md):
 
   * :mod:`repro.obs.trace` — Chrome/Perfetto ``trace_event`` spans around
-    the serving/calibration hot paths (``--trace-out`` on the launchers);
+    the serving/calibration hot paths (``--trace-out`` on the launchers;
+    ``--trace-max-events`` caps the in-memory list as a ring);
   * :mod:`repro.obs.metrics` — Counter/Gauge/Histogram registry behind
     ``ContinuousEngine.metrics()``, with Prometheus exposition and JSON
     snapshots (``--metrics-out``);
   * :mod:`repro.obs.numerics` — per-layer R-factor condition monitoring
-    and residual-vs-bound checks (``--numerics-report``).
+    and residual-vs-bound checks (``--numerics-report``);
+  * :mod:`repro.obs.flight` — bounded per-request flight recorder and
+    postmortem bundle dumps (``--flight-recorder``);
+  * :mod:`repro.obs.server` — live HTTP telemetry endpoints ``/metrics``,
+    ``/healthz``, ``/requests``, ``/snapshot`` (``--telemetry-port``).
 """
-from repro.obs import metrics, numerics, trace
+from repro.obs import flight, metrics, numerics, server, trace
+from repro.obs.flight import EVENT_TYPES, FlightRecorder
 from repro.obs.metrics import (LATENCY_BUCKETS, Counter, Gauge, Histogram,
                                Registry, log_buckets)
 from repro.obs.numerics import (LayerHealth, NumericsPolicy,
                                 check_calibration, check_compression,
                                 check_r_factors, format_report,
                                 triangular_cond, worst_level)
+from repro.obs.server import TelemetryServer
 from repro.obs.trace import Tracer
 
 __all__ = [
-    "trace", "metrics", "numerics",
+    "trace", "metrics", "numerics", "flight", "server",
     "Counter", "Gauge", "Histogram", "Registry", "LATENCY_BUCKETS",
     "log_buckets",
     "NumericsPolicy", "LayerHealth", "check_calibration",
     "check_compression", "check_r_factors", "format_report",
     "triangular_cond", "worst_level", "Tracer",
+    "FlightRecorder", "EVENT_TYPES", "TelemetryServer",
 ]

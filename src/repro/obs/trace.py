@@ -21,6 +21,10 @@ Design constraints (docs/observability.md has the span taxonomy):
     come from ``with`` blocks on that thread.
   * **Zero dependencies.** Stdlib only: ``time.perf_counter`` timestamps
     (microseconds relative to ``enable()``), ``json`` on save.
+  * **Bounded memory on demand.** ``enable(max_events=N)`` turns the event
+    list into a ring (``deque(maxlen=N)``): long-running serving keeps the
+    most recent N events and counts the rest in ``tracer.dropped``
+    (``launch/serve.py --trace-max-events`` wires this).
 
 Usage (the launchers wire ``--trace-out`` to this):
 
@@ -37,6 +41,7 @@ import json
 import os
 import threading
 import time
+from collections import deque
 from typing import Any, Dict, List, Optional
 
 
@@ -81,11 +86,14 @@ class _Span:
 class Tracer:
     """Collects trace events; ``save()`` writes Perfetto-loadable JSON."""
 
-    def __init__(self):
+    def __init__(self, max_events: Optional[int] = None):
         self._lock = threading.Lock()
-        self._events: List[dict] = []
+        # deque(maxlen=None) == unbounded append; a positive cap makes it a
+        # ring holding the most recent events (bounded-memory serving)
+        self._events: deque = deque(maxlen=max_events)
         self._t0 = time.perf_counter()
         self._pid = os.getpid()
+        self.dropped = 0
 
     # ------------------------------------------------------------- recording
     def _now_us(self) -> float:
@@ -93,7 +101,24 @@ class Tracer:
 
     def _emit(self, event: dict) -> None:
         with self._lock:
+            if (self._events.maxlen is not None
+                    and len(self._events) == self._events.maxlen):
+                self.dropped += 1
             self._events.append(event)
+
+    @property
+    def max_events(self) -> Optional[int]:
+        return self._events.maxlen
+
+    def set_max_events(self, max_events: Optional[int]) -> None:
+        """Re-cap the ring in place, keeping the newest events."""
+        with self._lock:
+            if max_events == self._events.maxlen:
+                return
+            old = list(self._events)
+            if max_events is not None and len(old) > max_events:
+                self.dropped += len(old) - max_events
+            self._events = deque(old, maxlen=max_events)
 
     def span(self, name: str, **args) -> _Span:
         return _Span(self, name, args)
@@ -114,6 +139,11 @@ class Tracer:
     def events(self) -> List[dict]:
         with self._lock:
             return list(self._events)
+
+    def tail(self, n: int) -> List[dict]:
+        """The most recent ``n`` events (postmortem bundles grab this)."""
+        with self._lock:
+            return list(self._events)[-n:] if n > 0 else []
 
     def save(self, path: str) -> int:
         """Write ``{"traceEvents": [...]}`` JSON; returns the event count."""
@@ -136,11 +166,18 @@ class Tracer:
 _TRACER: Optional[Tracer] = None
 
 
-def enable() -> Tracer:
-    """Install (or return) the process tracer; spans record from now on."""
+def enable(max_events: Optional[int] = None) -> Tracer:
+    """Install (or return) the process tracer; spans record from now on.
+
+    ``max_events`` caps the in-memory event list as a ring of the most
+    recent events (``None`` = unbounded, the default). Re-enabling an
+    existing tracer with an explicit cap re-caps it in place.
+    """
     global _TRACER
     if _TRACER is None:
-        _TRACER = Tracer()
+        _TRACER = Tracer(max_events=max_events)
+    elif max_events is not None:
+        _TRACER.set_max_events(max_events)
     return _TRACER
 
 

@@ -221,9 +221,23 @@ class ContinuousEngine:
                  prefill_bucket_sizes: Optional[Sequence[int]] = None,
                  detokenizer: Optional[Callable[[int], str]] = None,
                  async_detok: Optional[bool] = None,
-                 draft_params=None, spec_k: int = 4):
+                 draft_params=None, spec_k: int = 4,
+                 slo_ttft_s: Optional[float] = None,
+                 slo_tpot_s: Optional[float] = None,
+                 flight_recorder=None):
         self.model = model
         self.params = params
+        # live-telemetry plane (docs/observability.md): an optional flight
+        # recorder of per-request lifecycle events, per-request latency SLOs
+        # feeding the goodput gauge (None = every request trivially meets
+        # them), and the step/liveness bookkeeping /healthz reads
+        self.flight = flight_recorder
+        self.slo_ttft_s = slo_ttft_s
+        self.slo_tpot_s = slo_tpot_s
+        self._step_idx = 0
+        self._swap_epoch = 0
+        self.last_step_time: Optional[float] = None
+        self.warmed = False
         if paged_attn_impl is not None:
             ctx = dataclasses.replace(ctx, paged_attn_impl=paged_attn_impl)
         self.ctx = ctx
@@ -267,7 +281,8 @@ class ContinuousEngine:
         self.scheduler = Scheduler(self.pool, max_running=max_running,
                                    registry=self.registry,
                                    headroom_tokens=self.spec_k
-                                   if self._spec else 0)
+                                   if self._spec else 0,
+                                   flight=flight_recorder)
         # the draft decodes against its own pool (private registry: the
         # engine registry's pool_* series describe the target pool), kept in
         # lockstep with the target's — same allocs, commits, forks, frees —
@@ -366,6 +381,19 @@ class ContinuousEngine:
         self._h_step = reg.histogram(
             "serve_decode_step_seconds", LATENCY_BUCKETS,
             "steady-state decode step wall time (inter-token latency)")
+        # SLO accounting: per-request TPOT / end-to-end latency observed at
+        # _finish(), and goodput as a callback gauge over the finished list
+        # (reset_metrics() clears the list, so the gauge resets with it)
+        self._h_tpot = reg.histogram(
+            "serve_tpot_seconds", LATENCY_BUCKETS,
+            "per-request mean time per output token after the first")
+        self._h_e2e = reg.histogram(
+            "serve_request_e2e_seconds", LATENCY_BUCKETS,
+            "arrival -> request completion")
+        reg.gauge("serve_slo_goodput",
+                  "fraction of finished requests meeting the TTFT/TPOT "
+                  "SLOs (1.0 with no SLO set or nothing finished)",
+                  fn=self._slo_goodput)
         reg.gauge("serve_running_requests", "requests in the decode batch",
                   fn=lambda: len(self.scheduler.running))
         reg.gauge("serve_decode_compiles", "decode jit cache entries",
@@ -493,6 +521,10 @@ class ContinuousEngine:
         if self._start_time is None:
             self._start_time = req.arrival_time
         self.scheduler.submit(req)
+        if self.flight is not None:
+            self.flight.record("submit", req_id=req.req_id,
+                               prompt_tokens=int(prompt.size),
+                               max_new_tokens=int(max_new_tokens))
         return req.req_id
 
     def has_work(self) -> bool:
@@ -501,7 +533,23 @@ class ContinuousEngine:
     def step(self) -> List[Request]:
         """Admit + prefill joiners (same-length-bucket suffixes batched into
         one jitted call), run one decode step over the running batch; returns
-        the requests that finished during this step."""
+        the requests that finished during this step. A raising step dumps
+        the postmortem bundle (when a flight recorder is attached) before
+        propagating."""
+        self._step_idx += 1
+        if self.flight is not None:
+            self.flight.begin_step(self._step_idx)
+        try:
+            done = self._step_inner()
+        except Exception as e:
+            if self.flight is not None:
+                self.flight.record("step_exception", error=repr(e))
+                self.dump_postmortem("step_exception")
+            raise
+        self.last_step_time = time.perf_counter()
+        return done
+
+    def _step_inner(self) -> List[Request]:
         if self._recalib is not None:
             # between-steps hook: applies staged hot-swaps first, so a swap
             # always lands on a step boundary, never mid-dispatch
@@ -525,6 +573,9 @@ class ContinuousEngine:
                 assert dcached == cached, "draft pool diverged from target"
             self._c_prompt_tokens.inc(len(toks))
             self._c_prefix_hit_tokens.inc(cached)
+            if self.flight is not None and cached:
+                self.flight.record("prefix_hit", req_id=req.req_id,
+                                   cached_tokens=int(cached))
             if self._recalib is not None:
                 # capture rides the admission path: the recalibrator replays
                 # exactly the tokens this prefill is about to compute over
@@ -584,6 +635,10 @@ class ContinuousEngine:
         if self._spec:
             self.draft_pool.fork(parent.req_id, child.req_id)
         self.scheduler.adopt(child)
+        if self.flight is not None:
+            self.flight.record("fork", req_id=child.req_id,
+                               parent=parent.req_id,
+                               at_tokens=len(child.out_tokens))
         return child.req_id
 
     # ------------------------------------------------------- recalibration
@@ -597,6 +652,7 @@ class ContinuousEngine:
         tests/test_obs.py) is frozen, same contract as the spec-only
         series."""
         self._recalib = worker
+        worker._engine = self      # reject-path flight/postmortem wiring
         reg = self.registry
         worker.bind_metrics(
             swaps=reg.counter("serve_recalib_swaps_total",
@@ -649,6 +705,11 @@ class ContinuousEngine:
             self.params = params
             if draft_params is not None:
                 self.draft_params = draft_params
+        self._swap_epoch += 1
+        if self.flight is not None:
+            self.flight.record("recalib_swap", epoch=self._swap_epoch,
+                               draft=draft_params is not None,
+                               in_flight=len(self.scheduler.running))
 
     def stream(self) -> Iterator[Request]:
         """Drive steps until the queue drains, yielding finished requests.
@@ -782,6 +843,7 @@ class ContinuousEngine:
                 self._warm_prefill(b, l, nb)
         self._warmed_decode = self.decode_compile_count()
         self._warmed_prefill = self.prefill_compile_count()
+        self.warmed = True                  # /healthz readiness flips here
         dt = time.perf_counter() - t0
         self._warmup_seconds += dt
         return {"warmup_seconds": dt, "max_len": float(max_len),
@@ -1009,6 +1071,7 @@ class ContinuousEngine:
                 "serve_preemptions_total").value),
             "warmup_seconds": self._warmup_seconds,
             "post_warmup_compiles": self.post_warmup_compiles(),
+            "slo_goodput": self._slo_goodput(),
         }
         if self._spec:
             # speculative-mode-only keys: the non-spec metrics() schema is
@@ -1033,9 +1096,12 @@ class ContinuousEngine:
                 "recalib_residual_excess": float(w.last_excess),
             })
         if not fin:
+            # TTFT is undefined with nothing finished: None, never NaN —
+            # json.dumps(..., allow_nan=False) must accept this dict (the
+            # /snapshot endpoint and postmortem bundles serialize it)
             return {"requests": 0, "requests_per_sec": 0.0, "new_tokens": 0,
-                    "tokens_per_sec": 0.0, "mean_ttft_s": float("nan"),
-                    "max_ttft_s": float("nan"), **decode}
+                    "tokens_per_sec": 0.0, "mean_ttft_s": None,
+                    "max_ttft_s": None, **decode}
         ttfts = [r.ttft for r in fin if r.ttft is not None]
         new_tokens = sum(len(r.out_tokens) for r in fin)
         elapsed = max(max(r.finish_time for r in fin) - self._start_time,
@@ -1045,8 +1111,8 @@ class ContinuousEngine:
             "requests_per_sec": len(fin) / elapsed,
             "new_tokens": new_tokens,
             "tokens_per_sec": new_tokens / elapsed,
-            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else float("nan"),
-            "max_ttft_s": float(np.max(ttfts)) if ttfts else float("nan"),
+            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else None,
+            "max_ttft_s": float(np.max(ttfts)) if ttfts else None,
             **decode,
         }
 
@@ -1064,6 +1130,74 @@ class ContinuousEngine:
         else:
             deliver(req, token, index, done, self.detokenizer)
 
+    @staticmethod
+    def _req_tpot(req: Request) -> Optional[float]:
+        """Per-request mean time per output token after the first; None
+        until finished or with fewer than two tokens (no interval exists)."""
+        if req.first_token_time is None or req.finish_time is None:
+            return None
+        n = len(req.out_tokens)
+        if n < 2:
+            return None
+        return (req.finish_time - req.first_token_time) / (n - 1)
+
+    def _meets_slo(self, req: Request) -> bool:
+        """Did a finished request meet the configured latency SLOs? An
+        unset SLO (None) is vacuously met; so is a TPOT SLO on a request
+        too short to have one."""
+        if self.slo_ttft_s is not None:
+            t = req.ttft
+            if t is None or t > self.slo_ttft_s:
+                return False
+        if self.slo_tpot_s is not None:
+            tp = self._req_tpot(req)
+            if tp is not None and tp > self.slo_tpot_s:
+                return False
+        return True
+
+    def _slo_goodput(self) -> float:
+        """Fraction of finished requests meeting the SLOs (1.0 when nothing
+        has finished — goodput degrades from perfect, it doesn't start
+        broken)."""
+        fin = self.finished
+        if not fin:
+            return 1.0
+        return sum(1 for r in fin if self._meets_slo(r)) / len(fin)
+
+    def dump_postmortem(self, reason: str,
+                        path: Optional[str] = None) -> Optional[str]:
+        """Write the flight recorder's postmortem bundle (ring tail +
+        metrics snapshot + engine config + trace tail); returns the path,
+        or None when no recorder is attached. Wired to the failure paths —
+        step exceptions, recalib gate rejections — and callable from test
+        harnesses (the soak suite dumps on pool-invariant failures)."""
+        if self.flight is None:
+            return None
+        try:
+            metrics = self.metrics()
+        except Exception:            # never let a broken metric eat the dump
+            metrics = {}
+        config = {
+            "block_size": self.block_size,
+            "num_blocks": self.pool.num_blocks,
+            "max_running": self.scheduler.max_running,
+            "bucket_sizes": list(self.bucket_sizes),
+            "prefill_bucket_sizes": list(self.prefill_bucket_sizes),
+            "paged_kernel": self.paged_kernel,
+            "prefill_kernel": self.prefill_kernel,
+            "prefix_cache": self.prefix_cache,
+            "spec": self._spec,
+            "spec_k": self.spec_k,
+            "slo_ttft_s": self.slo_ttft_s,
+            "slo_tpot_s": self.slo_tpot_s,
+            "compute_dtype": str(self.compute_dtype),
+            "cache_dtype": str(self.cache_dtype),
+            "step": self._step_idx,
+            "swap_epoch": self._swap_epoch,
+        }
+        return self.flight.dump(reason=reason, metrics=metrics,
+                                config=config, path=path)
+
     def _finish(self, req: Request) -> None:
         self.scheduler.evict(req)
         if self._spec:
@@ -1071,6 +1205,16 @@ class ContinuousEngine:
         self.finished.append(req)
         self._c_finished.inc()
         self._c_new_tokens.inc(len(req.out_tokens))
+        self._h_e2e.observe(req.finish_time - req.arrival_time)
+        tpot = self._req_tpot(req)
+        if tpot is not None:
+            self._h_tpot.observe(tpot)
+        if self.flight is not None:
+            self.flight.record("finish", req_id=req.req_id,
+                               new_tokens=len(req.out_tokens),
+                               preemptions=req.preemptions,
+                               ttft_s=req.ttft, tpot_s=tpot,
+                               slo_ok=self._meets_slo(req))
         if self._recalib is not None:
             # completion capture: the generated inputs (out_tokens[:-1])
             # stream into calibration once the request's tail is known
@@ -1124,6 +1268,9 @@ class ContinuousEngine:
             if req.first_token_time is None:
                 req.first_token_time = time.perf_counter()
                 self._h_ttft.observe(req.ttft)
+                if self.flight is not None:
+                    self.flight.record("first_token", req_id=req.req_id,
+                                       ttft_s=req.ttft)
 
     def _prefill_batch(self, group) -> None:
         """One jitted prefill over a same-bucket group of (request, tokens,
@@ -1149,6 +1296,11 @@ class ContinuousEngine:
         nb_pad = _pow2_at_least(max(self.pool.blocks_for(s + l_pad)
                                     for s in starts))
         sig = (b_pad, l_pad, nb_pad)
+        if self.flight is not None:
+            for r, ln_i in zip(reqs, lens):
+                self.flight.record("prefill", req_id=r.req_id,
+                                   suffix_tokens=int(ln_i), bucket=l_pad,
+                                   batch=len(group))
         fresh = sig not in self._prefill_shapes or (
             self._spec and sig not in self._draft_prefill_shapes)
         self._prefill_shapes.add(sig)
@@ -1217,6 +1369,9 @@ class ContinuousEngine:
             if r.first_token_time is None:
                 r.first_token_time = now
                 self._h_ttft.observe(r.ttft)
+                if self.flight is not None:
+                    self.flight.record("first_token", req_id=r.req_id,
+                                       ttft_s=r.ttft)
             self.pool.commit(r.req_id, r.prefill_tokens()[:r.cache_len])
             if self._spec:
                 self.draft_pool.commit(r.req_id,
@@ -1408,6 +1563,9 @@ class ContinuousEngine:
                                                         dlog[:, i])
             r.spec_accepted += n_acc
             self._c_spec_accepted.inc(n_acc)
+            if self.flight is not None:
+                self.flight.record("spec_round", req_id=r.req_id,
+                                   proposed=k, accepted=n_acc)
             keep: List[int] = []
             for t in toks:
                 if len(r.out_tokens) + len(keep) >= r.max_new_tokens:

@@ -224,6 +224,10 @@ class RecalibWorker:
         self._lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
         self._metrics = {}
+        # set by engine.attach_recalibrator: lets the async solve path (no
+        # engine argument) reach the flight recorder / postmortem dump when
+        # a readiness gate rejects a solve
+        self._engine = None
 
     # ------------------------------------------------------------ metrics
     def bind_metrics(self, **counters) -> None:
@@ -242,11 +246,22 @@ class RecalibWorker:
         self.cal.on_prefill(self.base_params, req)
         self._inc("sampled", self.cal.sampled_requests - before_r)
         self._inc("tokens", self.cal.captured_tokens - before_t)
+        self._record_capture(engine, req, self.cal.captured_tokens - before_t,
+                             at="prefill")
 
     def on_finish(self, engine, req) -> None:
         before_t = self.cal.captured_tokens
         self.cal.on_finish(self.base_params, req)
         self._inc("tokens", self.cal.captured_tokens - before_t)
+        self._record_capture(engine, req, self.cal.captured_tokens - before_t,
+                             at="finish")
+
+    @staticmethod
+    def _record_capture(engine, req, tokens: int, *, at: str) -> None:
+        fl = getattr(engine, "flight", None)
+        if fl is not None and tokens > 0:
+            fl.record("recalib_capture", req_id=req.req_id,
+                      tokens=int(tokens), at=at)
 
     def on_step(self, engine) -> None:
         """Between-steps hook: apply any staged swap, then (inline mode)
@@ -351,6 +366,17 @@ class RecalibWorker:
             self.last_status = ("cond_fail" if cond_fail else "bound_fail")
             trace.instant("serve.recalib_reject", status=self.last_status,
                           layers=len(cond_fail) + len(bound_fail))
+            # a gate rejection means the numerics monitors graded the solve
+            # untrustworthy — exactly the moment the postmortem bundle is
+            # worth having (engine/flight wiring is optional; no-op without)
+            eng = self._engine
+            fl = getattr(eng, "flight", None)
+            if fl is not None:
+                fl.record("recalib_reject", status=self.last_status,
+                          layers=len(cond_fail) + len(bound_fail),
+                          excess=float(self.last_excess)
+                          if math.isfinite(self.last_excess) else None)
+                eng.dump_postmortem(f"recalib_{self.last_status}")
             return None
         self.last_status = "cleared"
         return new_params, draft_params

@@ -93,9 +93,12 @@ class Scheduler:
 
     def __init__(self, pool, max_running: int = 8,
                  registry: Optional[Registry] = None,
-                 headroom_tokens: int = 0):
+                 headroom_tokens: int = 0, flight=None):
         self.pool = pool
         self.max_running = max_running
+        # optional obs.flight.FlightRecorder: admission, preemption and
+        # eviction land here so a postmortem shows the scheduling history
+        self.flight = flight
         # extra cache positions every running request may transiently write
         # past its budget (speculative decoding: a verify round can land up
         # to spec_k uncommitted tail tokens before rollback)
@@ -134,6 +137,11 @@ class Scheduler:
         admit() batch never promises the same blocks twice."""
         admitted = []
         reserved = 0
+        if not self.waiting:
+            # nothing to admit: skip the span too — at steady state this
+            # is every step, and an empty admit span per decode step is
+            # pure tracing overhead (the obs_overhead_pct bar is tight)
+            return admitted
         with trace.span("serve.admit", waiting=len(self.waiting),
                         running=len(self.running)):
             # prefix-cached blocks in the LRU are evictable on demand, so
@@ -155,8 +163,12 @@ class Scheduler:
                 self.running.append(req)
                 admitted.append(req)
                 self._c_admitted.inc()
-                self._h_queue_wait.observe(
-                    time.perf_counter() - req.arrival_time)
+                wait = time.perf_counter() - req.arrival_time
+                self._h_queue_wait.observe(wait)
+                if self.flight is not None:
+                    self.flight.record("admit", req_id=req.req_id,
+                                       queue_wait_s=wait, blocks=need,
+                                       preemptions=req.preemptions)
         return admitted
 
     def adopt(self, req: Request) -> None:
@@ -174,6 +186,9 @@ class Scheduler:
         self.running.remove(req)
         req.state = FINISHED
         req.finish_time = time.perf_counter()
+        if self.flight is not None:
+            self.flight.record("evict", req_id=req.req_id,
+                               out_tokens=len(req.out_tokens))
 
     def preempt_youngest(self) -> Optional[Request]:
         """Free the most recently admitted request and requeue it at the
@@ -190,4 +205,8 @@ class Scheduler:
             victim.preemptions += 1
             self._c_preemptions.inc()
             self.waiting.appendleft(victim)
+            if self.flight is not None:
+                self.flight.record("preempt", req_id=victim.req_id,
+                                   generated=len(victim.out_tokens),
+                                   preemptions=victim.preemptions)
         return victim

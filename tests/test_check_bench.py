@@ -33,6 +33,11 @@ def _artifact():
         ("serve/post_warmup_compiles", 0),
         ("serve/offline_tok_per_s", "95.30"),
         ("serve/obs_overhead_pct", "1.25"),
+        ("serve/slo_goodput", "1.0"),
+        ("serve/serve_tpot_seconds_p50", "0.012"),
+        ("serve/serve_tpot_seconds_p99", "0.019"),
+        ("serve/serve_request_e2e_seconds_p50", "0.23"),
+        ("serve/serve_request_e2e_seconds_p99", "0.41"),
         ("serve/spec_accept_rate", "0.912"),
         ("serve/spec_decode_speedup", "1.140"),
         ("serve/spec_greedy_parity", "1.0"),
@@ -99,6 +104,7 @@ def test_band_override_tightens(gate):
 @pytest.mark.parametrize("name,value,frag", [
     ("serve/post_warmup_compiles", 3, "hard invariant"),
     ("serve/obs_overhead_pct", "7.5", "hard invariant"),
+    ("serve/slo_goodput", "0.75", "hard invariant"),
     ("serve/paged_vs_gather_decode_speedup", "0.90", "hard invariant"),
     ("serve/spec_decode_speedup", "0.95", "hard invariant"),
     ("serve/spec_greedy_parity", "0.0", "hard invariant"),

@@ -1,0 +1,146 @@
+"""Exposition linter (tools/check_prom.py): every failure class goes red.
+
+CI trusts this linter on both the exit-written metrics file and the live
+``/metrics`` scrape, so each check must demonstrably fire — especially
+the HELP-coverage classes added with the telemetry plane: a TYPE-declared
+family with no ``# HELP``, an empty HELP string, a malformed HELP line,
+and a duplicated one. Pure text fixtures, no engine: the real-registry
+green path lives in tests/test_obs.py and tests/test_telemetry.py.
+"""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "tools"))
+from check_prom import lint  # noqa: E402
+
+VALID = """\
+# HELP serve_requests_total completed requests
+# TYPE serve_requests_total counter
+serve_requests_total 3
+# HELP queue_depth requests waiting for admission
+# TYPE queue_depth gauge
+queue_depth 2
+# HELP ttft_seconds time to first token
+# TYPE ttft_seconds histogram
+ttft_seconds_bucket{le="0.1"} 1
+ttft_seconds_bucket{le="1.0"} 2
+ttft_seconds_bucket{le="+Inf"} 3
+ttft_seconds_sum 1.25
+ttft_seconds_count 3
+"""
+
+
+def test_valid_exposition_is_clean():
+    assert lint(VALID) == []
+
+
+def _expect(text, *fragments):
+    """Lint must produce >= 1 error, and each fragment must appear."""
+    errors = lint(text)
+    assert errors, f"expected errors for {fragments}"
+    for frag in fragments:
+        assert any(frag in e for e in errors), (frag, errors)
+    return errors
+
+
+class TestHelpCoverage:
+    def test_missing_help_for_type_declared_family(self):
+        text = VALID.replace(
+            "# HELP queue_depth requests waiting for admission\n", "")
+        _expect(text, "metric 'queue_depth': missing HELP line")
+
+    def test_empty_help_text(self):
+        text = VALID.replace(
+            "# HELP queue_depth requests waiting for admission",
+            "# HELP queue_depth")
+        _expect(text, "empty HELP text for 'queue_depth'")
+
+    def test_whitespace_only_help_text(self):
+        text = VALID.replace(
+            "# HELP queue_depth requests waiting for admission",
+            "# HELP queue_depth    ")
+        _expect(text, "empty HELP text for 'queue_depth'")
+
+    def test_malformed_help_bad_name(self):
+        text = "# HELP 0bad some text\n" + VALID
+        _expect(text, "malformed HELP line")
+
+    def test_duplicate_help(self):
+        text = VALID + "# HELP queue_depth said twice\n"
+        _expect(text, "duplicate HELP for 'queue_depth'")
+
+    def test_help_without_samples_still_counts_as_coverage(self):
+        """HELP + TYPE with zero samples is legal exposition (a histogram
+        that never observed still emits buckets, but a family awaiting
+        traffic may legitimately be declared first)."""
+        text = ("# HELP pending_total not yet incremented\n"
+                "# TYPE pending_total counter\n")
+        assert lint(text) == []
+
+
+class TestPreexistingClasses:
+    """The original failure classes must survive the HELP additions."""
+
+    def test_counter_without_total_suffix(self):
+        text = ("# HELP reqs completed requests\n"
+                "# TYPE reqs counter\n"
+                "reqs 3\n")
+        _expect(text, "should end in _total")
+
+    def test_sample_without_type(self):
+        _expect(VALID + "orphan_metric 1\n", "has no TYPE line")
+
+    def test_duplicate_type(self):
+        text = VALID + ("# TYPE queue_depth gauge\n")
+        _expect(text, "duplicate TYPE for 'queue_depth'")
+
+    def test_unparseable_sample(self):
+        _expect(VALID + "queue_depth oops extra stuff ~\n",
+                "unparseable sample")
+
+    def test_bad_value(self):
+        _expect(VALID + "queue_depth notafloat\n", "bad value")
+
+    def test_histogram_missing_inf_bucket(self):
+        text = VALID.replace('ttft_seconds_bucket{le="+Inf"} 3\n', "")
+        errors = _expect(text, "missing +Inf bucket")
+        # _count can no longer be cross-checked, but the class still fires
+        assert any("ttft_seconds" in e for e in errors)
+
+    def test_histogram_decreasing_cumulative_counts(self):
+        text = VALID.replace('ttft_seconds_bucket{le="1.0"} 2',
+                             'ttft_seconds_bucket{le="1.0"} 0')
+        _expect(text, "cumulative bucket counts decrease")
+
+    def test_histogram_count_mismatch(self):
+        text = VALID.replace("ttft_seconds_count 3", "ttft_seconds_count 7")
+        _expect(text, "_count 7.0 != +Inf bucket 3.0")
+
+    def test_histogram_missing_sum(self):
+        text = VALID.replace("ttft_seconds_sum 1.25\n", "")
+        _expect(text, "missing _sum")
+
+    def test_duplicate_sample(self):
+        _expect(VALID + "queue_depth 2\n", "duplicate sample")
+
+    def test_bad_label(self):
+        text = VALID + ("# HELP labeled_total labeled counter\n"
+                        "# TYPE labeled_total counter\n"
+                        'labeled_total{bad label="x"} 1\n')
+        _expect(text, "bad label")
+
+
+def test_cli_red_and_green(tmp_path, capsys):
+    from check_prom import main
+    good = tmp_path / "good.prom"
+    good.write_text(VALID)
+    assert main(["check_prom.py", str(good)]) == 0
+    bad = tmp_path / "bad.prom"
+    bad.write_text(VALID.replace(
+        "# HELP queue_depth requests waiting for admission\n", ""))
+    assert main(["check_prom.py", str(bad)]) == 1
+    err = capsys.readouterr().err
+    assert "missing HELP line" in err

@@ -131,6 +131,30 @@ class TestTracer:
         trace.disable()
         assert trace.current() is None
 
+    def test_ring_mode_bounds_memory(self):
+        """enable(max_events=N) keeps the most recent N events and counts
+        the overflow in dropped; save() still emits valid JSON."""
+        t = trace.enable(max_events=10)
+        for i in range(25):
+            t.instant(f"e{i}")
+        evs = t.events()
+        assert len(evs) == 10
+        assert [e["name"] for e in evs] == [f"e{i}" for i in range(15, 25)]
+        assert t.dropped == 15
+        assert [e["name"] for e in t.tail(3)] == ["e22", "e23", "e24"]
+
+    def test_ring_recap_in_place(self):
+        """Re-enabling with an explicit cap re-caps the live tracer,
+        keeping the newest events."""
+        t = trace.enable()
+        for i in range(8):
+            t.instant(f"e{i}")
+        assert trace.enable(max_events=3) is t
+        assert [e["name"] for e in t.events()] == ["e5", "e6", "e7"]
+        assert t.dropped == 5
+        t.instant("e8")
+        assert [e["name"] for e in t.events()] == ["e6", "e7", "e8"]
+
 
 def _nesting_ok(events):
     """Per-tid, complete events must nest like a call stack: sorted by
@@ -238,7 +262,7 @@ METRICS_KEYS = {
     "prefill_tok_per_s", "prefill_kernel",
     "prefix_hit_rate", "prefix_hit_tokens", "cached_blocks",
     "cow_copies", "prefix_evictions", "queue_depth",
-    "warmup_seconds", "post_warmup_compiles",
+    "warmup_seconds", "post_warmup_compiles", "slo_goodput",
 }
 
 # frozen registry series names (snapshot() expands histograms with these
@@ -250,6 +274,8 @@ REGISTRY_NAMES = {
     "serve_prompt_tokens_total", "serve_prefix_hit_tokens_total",
     "serve_requests_finished_total", "serve_new_tokens_total",
     "serve_ttft_seconds", "serve_decode_step_seconds",
+    "serve_tpot_seconds", "serve_request_e2e_seconds",
+    "serve_slo_goodput",
     "serve_running_requests", "serve_decode_compiles",
     "serve_prefill_compiles",
     "serve_warmup_seconds", "serve_post_warmup_compiles",
@@ -296,6 +322,55 @@ class TestEngineWiring:
         # prometheus exposition must stay float-clean too
         assert "inf" not in eng.registry.prometheus()
 
+    def test_metrics_strict_json_on_zero_finished_runs(self, smollm):
+        """Regression: metrics() used to emit float('nan') for mean/max
+        TTFT before anything finished, which json.dumps turns into
+        non-strict NaN literals that the /snapshot endpoint (and any strict
+        parser) rejects. Undefined TTFT is None now, in every branch."""
+        cfg, model, params = smollm
+        eng = _engine(model, params)
+        m = eng.metrics()                         # nothing submitted
+        assert m["mean_ttft_s"] is None and m["max_ttft_s"] is None
+        assert m["tokens_per_sec"] == 0.0
+        json.loads(json.dumps(m, allow_nan=False))
+        eng.submit(_prompt(cfg, 6), 3)
+        eng.step()                                # in flight, none finished
+        if not eng.finished:
+            assert eng.metrics()["mean_ttft_s"] is None
+        while eng.has_work():
+            eng.step()
+        m = eng.metrics()
+        assert m["mean_ttft_s"] is not None and m["mean_ttft_s"] >= 0.0
+        json.loads(json.dumps(m, allow_nan=False))
+
+    def test_slo_accounting(self, smollm):
+        """TPOT/e2e histograms fill at _finish and the goodput gauge grades
+        finished requests against the configured SLOs: impossible SLOs give
+        0.0, generous ones 1.0, none (or nothing finished) reads 1.0."""
+        cfg, model, params = smollm
+        eng = _engine(model, params, slo_ttft_s=1e-9, slo_tpot_s=1e-9)
+        assert eng.metrics()["slo_goodput"] == 1.0     # vacuous: none done
+        for i in range(2):
+            eng.submit(_prompt(cfg, 6, seed=i), 4)
+        while eng.has_work():
+            eng.step()
+        m = eng.metrics()
+        assert m["slo_goodput"] == 0.0                 # nothing beats 1ns
+        assert eng.registry.get("serve_slo_goodput").value == 0.0
+        assert eng.registry.get("serve_tpot_seconds").count == 2
+        assert eng.registry.get("serve_request_e2e_seconds").count == 2
+        assert eng.registry.get("serve_tpot_seconds").max > 0.0
+        # generous SLOs: everything meets them
+        eng2 = _engine(model, params, slo_ttft_s=3600.0, slo_tpot_s=3600.0)
+        eng2.submit(_prompt(cfg, 6), 4)
+        while eng2.has_work():
+            eng2.step()
+        assert eng2.metrics()["slo_goodput"] == 1.0
+        # reset drops the finished list, so the gauge reads vacuous again
+        eng.reset_metrics()
+        assert eng.registry.get("serve_slo_goodput").value == 1.0
+        assert eng.registry.get("serve_tpot_seconds").count == 0
+
     def test_reset_metrics_resets_request_level_stats(self, smollm):
         cfg, model, params = smollm
         eng = _engine(model, params)
@@ -309,7 +384,7 @@ class TestEngineWiring:
         m = eng.metrics()
         assert m["requests"] == 0
         assert m["preemptions"] == 0
-        assert np.isnan(m["mean_ttft_s"])         # TTFT samples gone
+        assert m["mean_ttft_s"] is None           # TTFT samples gone
         snap = eng.registry.snapshot()
         assert snap["serve_ttft_seconds_count"] == 0
         assert snap["serve_queue_wait_seconds_count"] == 0

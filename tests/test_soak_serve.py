@@ -11,9 +11,19 @@ invariants, and at the end every greedy request must match the fixed-batch
 ``ServeEngine`` oracle token-for-token — forked children included (greedy
 children continue the parent's trajectory).
 
+Every soak runs with a ``FlightRecorder`` attached; if a pool invariant
+trips, the postmortem bundle (ring tail + metrics + config) is dumped
+before the assertion propagates, so a red soak in CI ships the scheduling
+history that led to it. A forced-failure test proves the bundle parses
+and carries the hidden request's complete event history.
+
 A short variant keeps the soak in tier-1; the full sweep (more seeds, more
 requests, speculative lane) runs under ``-m slow``.
 """
+import json
+import os
+import tempfile
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -24,6 +34,7 @@ from repro.configs import get_smoke_config
 from repro.core.calibrate import calibrate_model
 from repro.core.compress import compress_model
 from repro.models import build_model
+from repro.obs import EVENT_TYPES, FlightRecorder
 from repro.serve import ContinuousEngine, ServeEngine
 
 
@@ -71,12 +82,28 @@ def _pool_invariants(pool, live_ids):
 
 def _soak(cfg, model, params, *, seed, n_requests, dparams=None,
           swap=True, num_blocks=14, block_size=2, max_running=3,
-          max_prompt=8, max_new=7):
+          max_prompt=8, max_new=7, dump_path=None, sabotage_step=None):
     rng = np.random.RandomState(seed)
+    # every soak records flight history; a tripped invariant dumps the
+    # postmortem bundle before re-raising (default path: a temp dir, so a
+    # green soak leaves no litter in the working tree)
+    if dump_path is None:
+        dump_path = os.path.join(tempfile.mkdtemp(prefix="soak_pm_"),
+                                 "POSTMORTEM_soak.json")
+    fl = FlightRecorder(capacity=4096, dump_path=dump_path)
     eng = ContinuousEngine(model, params, compute_dtype=jnp.float32,
                            cache_dtype=jnp.float32, block_size=block_size,
                            num_blocks=num_blocks, max_running=max_running,
-                           draft_params=dparams, spec_k=2)
+                           draft_params=dparams, spec_k=2,
+                           flight_recorder=fl)
+
+    def check(pool, live_ids):
+        try:
+            _pool_invariants(pool, live_ids)
+        except AssertionError:
+            eng.dump_postmortem("pool_invariant")
+            raise
+
     trace = []
     arrive = 0
     for _ in range(n_requests):
@@ -97,9 +124,13 @@ def _soak(cfg, model, params, *, seed, n_requests, dparams=None,
             expected[rid] = (prompt, nn)
         eng.step()
         live_ids = [r.req_id for r in eng.scheduler.running]
-        _pool_invariants(eng.pool, live_ids)
+        if sabotage_step is not None and step >= sabotage_step and live_ids:
+            # forced failure: hide a live request from the checker, so the
+            # conservation count genuinely fails and the dump path fires
+            live_ids = live_ids[1:]
+        check(eng.pool, live_ids)
         if eng.draft_pool is not None:
-            _pool_invariants(eng.draft_pool, live_ids)
+            check(eng.draft_pool, live_ids)
         running = list(eng.scheduler.running)
         if (running and rng.randint(4) == 0
                 and len(running) < max_running):
@@ -113,8 +144,7 @@ def _soak(cfg, model, params, *, seed, n_requests, dparams=None,
                 root = parents.get(parent.req_id, parent.req_id)
                 parents[child] = root
                 expected[child] = expected[root]
-            _pool_invariants(eng.pool,
-                             [r.req_id for r in eng.scheduler.running])
+            check(eng.pool, [r.req_id for r in eng.scheduler.running])
         if swap and running and rng.randint(3) == 0:
             eng.hot_swap(
                 jax.tree.map(jnp.copy, eng.params),
@@ -124,7 +154,7 @@ def _soak(cfg, model, params, *, seed, n_requests, dparams=None,
         step += 1
         assert step < 2000, "soak failed to drain"
     eng.flush_stream()
-    _pool_invariants(eng.pool, [])
+    check(eng.pool, [])
     assert eng.pool.available_blocks == eng.pool.usable_blocks
     assert len(eng.finished) == len(expected)
 
@@ -146,7 +176,8 @@ def _soak(cfg, model, params, *, seed, n_requests, dparams=None,
     stats = dict(swaps=swaps, forks=forks, checked=checked,
                  preemptions=sum(r.preemptions for r in fin.values()),
                  evictions=int(eng.registry.get(
-                     "pool_prefix_evictions_total").value))
+                     "pool_prefix_evictions_total").value),
+                 flight_events=len(fl), flight_dropped=fl.dropped)
     return stats
 
 
@@ -157,6 +188,38 @@ def test_soak_fast(smollm):
     stats = _soak(cfg, model, params, seed=0, n_requests=6)
     assert stats["swaps"] > 0
     assert stats["checked"] >= 6
+    assert stats["flight_events"] > 0    # the recorder rode along
+
+
+def test_soak_forced_failure_dumps_postmortem(smollm, tmp_path):
+    """A tripped pool invariant must leave a parseable (strict-JSON)
+    postmortem bundle carrying the complete event history of every
+    in-flight request — the acceptance contract for red soaks in CI."""
+    cfg, model, params = smollm
+    dump = tmp_path / "POSTMORTEM_soak.json"
+    with pytest.raises(AssertionError):
+        _soak(cfg, model, params, seed=3, n_requests=4, swap=False,
+              dump_path=str(dump), sabotage_step=2)
+    with open(dump) as f:
+        bundle = json.load(
+            f, parse_constant=lambda c: pytest.fail(f"non-strict {c}"))
+    assert bundle["reason"] == "pool_invariant"
+    events = bundle["events"]
+    assert events and bundle["dropped"] == 0
+    assert all(e["event"] in EVENT_TYPES for e in events)
+    seqs = [e["seq"] for e in events]
+    assert seqs == sorted(seqs)
+    # config + metrics snapshots ride along for the postmortem reader
+    assert bundle["config"]["num_blocks"] == 14
+    assert "slo_goodput" in bundle["metrics"]
+    # complete histories: every admitted request's record starts at its
+    # origin (submit, or fork for adopted children) — nothing truncated
+    admitted = {e["req_id"] for e in events if e["event"] == "admit"}
+    assert admitted
+    for rid in admitted:
+        hist = [e["event"] for e in events if e.get("req_id") == rid]
+        assert hist[0] in ("submit", "fork"), (rid, hist)
+        assert "admit" in hist
 
 
 @pytest.mark.slow

@@ -1,0 +1,241 @@
+"""Live telemetry HTTP plane (``repro.obs.server.TelemetryServer``).
+
+Scrapes a real server attached to a real ``ContinuousEngine`` over
+loopback: ``/metrics`` must be check_prom-clean mid-run, ``/healthz``
+must flip 503 -> 200 exactly when the engine becomes ready (warmup or
+first step) and back to 503 when a stuck engine misses its step
+deadline, ``/requests`` must reflect the live waiting/running sets, and
+``/snapshot`` must be strict JSON even on a zero-finished engine (the
+NaN-TTFT regression). Also pins the lifecycle contract: 503 before
+``attach()``, 404 on unknown paths, ephemeral port binding, and engine
+re-attachment on one port.
+"""
+import json
+import os
+import sys
+import urllib.error
+import urllib.request
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.obs import FlightRecorder, TelemetryServer
+from repro.serve import ContinuousEngine
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "tools"))
+from check_prom import lint  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = get_smoke_config("smollm_135m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("compute_dtype", jnp.float32)
+    kw.setdefault("cache_dtype", jnp.float32)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("num_blocks", 64)
+    kw.setdefault("max_running", 4)
+    return ContinuousEngine(model, params, **kw)
+
+
+def _prompt(cfg, n, seed=0):
+    rng = np.random.RandomState(seed)
+    return rng.randint(0, cfg.vocab_size, (n,)).astype(np.int32)
+
+
+def _get(server, path):
+    """(status, body, content-type) — HTTP errors return, not raise."""
+    try:
+        with urllib.request.urlopen(server.url(path), timeout=10) as r:
+            return r.getcode(), r.read().decode(), r.headers.get(
+                "Content-Type")
+    except urllib.error.HTTPError as e:
+        return e.code, e.read().decode(), e.headers.get("Content-Type")
+
+
+@pytest.fixture()
+def server():
+    srv = TelemetryServer(port=0)
+    yield srv
+    srv.close()
+
+
+def _drain(eng, cfg, n_requests=2, new_tokens=3):
+    for i in range(n_requests):
+        eng.submit(_prompt(cfg, 5 + i, seed=i), new_tokens)
+    while eng.has_work():
+        eng.step()
+
+
+class TestLifecycle:
+    def test_ephemeral_ports_are_distinct(self, server):
+        assert server.port > 0
+        other = TelemetryServer(port=0)
+        try:
+            assert other.port != server.port
+        finally:
+            other.close()
+
+    def test_503_until_attached_then_404_unknown(self, smollm, server):
+        cfg, model, params = smollm
+        code, body, _ = _get(server, "/metrics")
+        assert code == 503 and "no engine" in json.loads(body)["error"]
+        server.attach(_engine(model, params))
+        code, _, _ = _get(server, "/metrics")
+        assert code == 200
+        code, _, _ = _get(server, "/nope")
+        assert code == 404
+
+    def test_attach_repoints_one_port(self, smollm, server):
+        """One server spans the dense -> COALA engine sequence: after a
+        re-attach the same port serves the new engine's registry."""
+        cfg, model, params = smollm
+        eng1 = _engine(model, params)
+        server.attach(eng1)
+        _drain(eng1, cfg, n_requests=1)
+        eng2 = _engine(model, params)
+        server.attach(eng2)
+        _, body, _ = _get(server, "/snapshot")
+        assert json.loads(body)["requests"] == 0  # eng2, not eng1
+
+
+class TestEndpoints:
+    def test_metrics_scrape_is_check_prom_clean(self, smollm, server):
+        """The mid-run scrape is the same text CI lints from the file."""
+        cfg, model, params = smollm
+        eng = _engine(model, params)
+        server.attach(eng)
+        _drain(eng, cfg)
+        code, text, ctype = _get(server, "/metrics")
+        assert code == 200 and ctype == "text/plain; version=0.0.4"
+        assert lint(text) == []
+        assert "serve_requests_finished_total 2" in text
+        assert "serve_slo_goodput" in text
+
+    def test_snapshot_strict_json_even_zero_finished(self, smollm, server):
+        cfg, model, params = smollm
+        eng = _engine(model, params)
+        server.attach(eng)
+        code, body, _ = _get(server, "/snapshot")   # nothing finished yet
+        assert code == 200
+        snap = json.loads(
+            body, parse_constant=lambda c: pytest.fail(f"non-strict {c}"))
+        assert snap["requests"] == 0
+        assert snap["mean_ttft_s"] is None
+        _drain(eng, cfg)
+        _, body, _ = _get(server, "/snapshot")
+        snap = json.loads(
+            body, parse_constant=lambda c: pytest.fail(f"non-strict {c}"))
+        assert snap["requests"] == 2
+        assert snap["mean_ttft_s"] > 0
+
+    def test_requests_reflects_live_sets(self, smollm, server):
+        cfg, model, params = smollm
+        eng = _engine(model, params, max_running=1)
+        server.attach(eng)
+        eng.submit(_prompt(cfg, 5, seed=0), 8)
+        eng.submit(_prompt(cfg, 6, seed=1), 8)
+        eng.step()                       # admits one, queues the other
+        code, body, _ = _get(server, "/requests")
+        assert code == 200
+        reqs = json.loads(body)
+        assert len(reqs["running"]) == 1 and len(reqs["waiting"]) == 1
+        run = reqs["running"][0]
+        assert run["state"] == "running" and run["out_tokens"] >= 1
+        assert run["prompt_tokens"] == 5 and run["ttft_s"] > 0
+        assert reqs["waiting"][0]["state"] == "waiting"
+        while eng.has_work():
+            eng.step()
+        reqs = json.loads(_get(server, "/requests")[1])
+        assert reqs == {"waiting": [], "running": []}
+
+
+class TestHealthz:
+    def test_readiness_flips_on_first_step(self, smollm, server):
+        cfg, model, params = smollm
+        eng = _engine(model, params)
+        server.attach(eng)
+        code, body, _ = _get(server, "/healthz")
+        assert code == 503
+        h = json.loads(body)
+        assert h["ready"] is False and h["live"] is True
+        eng.submit(_prompt(cfg, 5), 8)
+        eng.step()
+        code, body, _ = _get(server, "/healthz")
+        h = json.loads(body)
+        assert code == 200 and h["ready"] is True
+        assert h["last_step_age_s"] >= 0 and h["running"] == 1
+
+    def test_readiness_via_warmed_flag(self, smollm, server):
+        """Warmup completion alone (no traffic yet) marks the engine
+        ready — CI polls /healthz for exactly this transition."""
+        cfg, model, params = smollm
+        eng = _engine(model, params)
+        server.attach(eng)
+        assert _get(server, "/healthz")[0] == 503
+        eng.warmed = True        # warmup() sets this; avoid full compile here
+        code, body, _ = _get(server, "/healthz")
+        assert code == 200 and json.loads(body)["ready"] is True
+
+    def test_liveness_trips_on_stalled_step(self, smollm, server):
+        """Pending work + no step inside the deadline = not live (503),
+        even though the engine was ready."""
+        cfg, model, params = smollm
+        eng = _engine(model, params)
+        srv = TelemetryServer(eng, port=0, step_deadline_s=1e-9)
+        try:
+            eng.submit(_prompt(cfg, 5), 4)
+            eng.step()           # ready now; deadline already blown
+            code, body, _ = _get(srv, "/healthz")
+            h = json.loads(body)
+            assert code == 503
+            assert h["ready"] is True and h["live"] is False
+            while eng.has_work():
+                eng.step()       # drained: idle engines are live again
+            assert _get(srv, "/healthz")[0] == 200
+        finally:
+            srv.close()
+
+
+class TestFailurePaths:
+    def test_endpoint_exception_returns_500(self, smollm, server):
+        class Broken:
+            class registry:                      # noqa: N801 — stand-in
+                @staticmethod
+                def prometheus():
+                    raise RuntimeError("boom")
+        server.attach(Broken())
+        code, body, _ = _get(server, "/metrics")
+        assert code == 500 and "boom" in json.loads(body)["error"]
+
+    def test_step_exception_dumps_postmortem(self, smollm, tmp_path,
+                                             monkeypatch):
+        """engine.step() raising records the event and writes the bundle
+        before re-raising."""
+        cfg, model, params = smollm
+        fl = FlightRecorder(capacity=64,
+                            dump_path=str(tmp_path / "pm.json"))
+        eng = _engine(model, params, flight_recorder=fl)
+        eng.submit(_prompt(cfg, 5), 2)
+        monkeypatch.setattr(eng, "_step_inner",
+                            lambda: (_ for _ in ()).throw(
+                                RuntimeError("injected")))
+        with pytest.raises(RuntimeError, match="injected"):
+            eng.step()
+        with open(tmp_path / "pm.json") as f:
+            bundle = json.load(
+                f, parse_constant=lambda c: pytest.fail(f"non-strict {c}"))
+        assert bundle["reason"] == "step_exception"
+        assert bundle["events"][-1]["event"] == "step_exception"
+        assert "injected" in bundle["events"][-1]["error"]
+        assert bundle["config"]["block_size"] == 4

@@ -18,7 +18,11 @@ Checks, per artifact:
   3. **Hard invariants** — non-negotiable acceptance rows enforced from
      this file, not the baseline, so editing a baseline can never relax
      them: ``serve/post_warmup_compiles == 0``, ``serve/obs_overhead_pct <
-     5``, ``serve/paged_vs_gather_decode_speedup >= 1``, the speculative
+     5`` (measured with the full telemetry plane on: server + flight
+     recorder + SLO accounting), ``serve/slo_goodput == 1`` (uncontended
+     smoke traffic must meet its generous SLOs — a goodput dip on an idle
+     box is an accounting bug, not load),
+     ``serve/paged_vs_gather_decode_speedup >= 1``, the speculative
      rows (``serve/spec_greedy_parity == 1``, ``serve/spec_accept_rate >
      0``, ``serve/spec_decode_speedup >= 1``,
      ``serve/spec_post_warmup_compiles == 0``), the live-recalibration
@@ -66,6 +70,7 @@ HARD_INVARIANTS = {
     "serve": [
         ("serve/post_warmup_compiles", "==", 0.0),
         ("serve/obs_overhead_pct", "<", 5.0),
+        ("serve/slo_goodput", "==", 1.0),
         ("serve/paged_vs_gather_decode_speedup", ">=", 1.0),
         ("serve/spec_greedy_parity", "==", 1.0),
         ("serve/spec_accept_rate", ">", 0.0),

@@ -117,8 +117,11 @@ def check_dist_flags() -> list:
 
 # every observability flag a launcher grows must be documented in
 # docs/observability.md — keep in sync with the obs-subsystem flag
-# vocabulary (tracing, metrics export, numerics reports)
-OBS_FLAG_RE = re.compile(r"trace-out|metrics-out|numerics")
+# vocabulary (tracing, metrics export, numerics reports, the live
+# telemetry plane: HTTP endpoints, flight recorder, SLO targets)
+OBS_FLAG_RE = re.compile(
+    r"trace-out|metrics-out|numerics|telemetry|flight-recorder|slo-|"
+    r"trace-max-events")
 
 
 def check_obs_flags() -> list:

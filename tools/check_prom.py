@@ -11,6 +11,9 @@ Checks:
     name and a parseable float value;
   * ``# TYPE`` lines name a known type and precede their metric's samples;
   * no metric is TYPE-declared twice;
+  * every metric family has a ``# HELP`` line with a non-empty help string
+    (and no family is HELP-declared twice) — an undocumented metric is a
+    lint error, not a style choice;
   * counters end in ``_total``;
   * histograms expose ``_bucket`` samples with non-decreasing cumulative
     counts, a ``+Inf`` bucket, and ``_sum``/``_count`` samples where
@@ -45,6 +48,7 @@ def _parse_value(raw: str) -> float:
 def lint(text: str) -> List[str]:
     errors: List[str] = []
     types: Dict[str, str] = {}
+    helps: Dict[str, str] = {}
     seen_samples: set = set()
     # histogram bookkeeping: name -> {"buckets": [(le, cum)], "sum": bool,
     #                                 "count": value}
@@ -60,6 +64,17 @@ def lint(text: str) -> List[str]:
         if not line.strip():
             continue
         if line.startswith("# HELP "):
+            parts = line.split(" ", 3)          # "#", "HELP", name, text
+            if len(parts) < 3 or not NAME_RE.match(parts[2]):
+                errors.append(f"line {ln}: malformed HELP line: {line!r}")
+                continue
+            name = parts[2]
+            help_text = parts[3].strip() if len(parts) == 4 else ""
+            if not help_text:
+                errors.append(f"line {ln}: empty HELP text for {name!r}")
+            if name in helps:
+                errors.append(f"line {ln}: duplicate HELP for {name!r}")
+            helps[name] = help_text
             continue
         if line.startswith("# TYPE "):
             parts = line.split()
@@ -144,6 +159,12 @@ def lint(text: str) -> List[str]:
         elif les and les[-1] == math.inf and h["count"] != cums[-1]:
             errors.append(f"histogram {name!r}: _count {h['count']} != "
                           f"+Inf bucket {cums[-1]}")
+
+    # every family must carry documentation: a TYPE-declared metric with no
+    # HELP line is as unscrapeable-in-practice as a malformed sample
+    for name in types:
+        if name not in helps:
+            errors.append(f"metric {name!r}: missing HELP line")
     return errors
 
 
